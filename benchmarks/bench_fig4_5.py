@@ -1,0 +1,45 @@
+"""Paper Figs. 4-5: cumulative efficiency and fairness over 10 rounds under
+efficiency-preferred (beta=0.5), unbiased (beta=2.2) and fairness-preferred
+(beta=5.0) settings, DPBalance vs DPK/DPF/FCFS on the §VI simulation."""
+import time
+
+import numpy as np
+
+from repro.core import SchedulerConfig, SimConfig, run_simulation
+
+from .common import SMALL, Row, derived
+
+BETAS = (0.5, 2.2, 5.0)
+SCHEDS = ("dpbalance", "dpf", "dpk", "fcfs")
+
+
+def run() -> list:
+    sim = SimConfig(n_rounds=3, n_devices=20, seed=0) if SMALL else \
+        SimConfig(n_rounds=10, n_devices=100, seed=0)
+    rows = []
+    improvements = {}
+    for beta in BETAS:
+        res = {}
+        for s in SCHEDS:
+            t0 = time.perf_counter()
+            res[s] = run_simulation(s, sim, SchedulerConfig(beta=beta))
+            us = (time.perf_counter() - t0) / sim.n_rounds * 1e6
+            r = res[s]
+            rows.append((f"fig4_5/beta{beta}/{s}", us, derived(
+                cum_eff=round(float(r["cumulative_efficiency"][-1]), 4),
+                cum_fair_norm=round(float(r["cumulative_fairness_norm"][-1]), 4),
+                mean_jain=round(float(r["round_jain"].mean()), 4),
+                allocated=int(r["n_allocated"].sum()))))
+        ours = res["dpbalance"]
+        eff_imp = [ours["cumulative_efficiency"][-1] /
+                   max(res[b]["cumulative_efficiency"][-1], 1e-9)
+                   for b in SCHEDS[1:]]
+        fair_imp = [ours["cumulative_fairness_norm"][-1] /
+                    max(res[b]["cumulative_fairness_norm"][-1], 1e-9)
+                    for b in SCHEDS[1:]]
+        improvements[beta] = (eff_imp, fair_imp)
+        rows.append((f"fig4_5/beta{beta}/improvement", 0.0, derived(
+            eff_x_min=round(min(eff_imp), 3), eff_x_max=round(max(eff_imp), 3),
+            fair_x_min=round(min(fair_imp), 3),
+            fair_x_max=round(max(fair_imp), 3))))
+    return rows

@@ -1,0 +1,53 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — wall numbers are
+for relative tracking only; the TPU targets are characterized by the roofline
+bytes/flops derived columns)."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import SMALL, derived, time_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> list:
+    rows = []
+    B, H, KH, S, dh = (1, 2, 1, 128, 64) if SMALL else (2, 8, 2, 512, 128)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, KH, S, dh), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, KH, S, dh), jnp.bfloat16)
+    us = time_fn(lambda *a: ops.flash_attention_op(
+        *a, causal=True, block_q=128, block_k=128), q, k, v, iters=2)
+    us_ref = time_fn(lambda *a: ref.flash_attention_ref(*a, causal=True)
+                     .block_until_ready(), q, k, v, iters=2)
+    flops = 4 * B * H * S * S * dh // 2
+    rows.append((f"kernel/flash_attn_B{B}H{H}S{S}", us, derived(
+        jnp_ref_us=round(us_ref, 1), approx_flops=flops)))
+
+    L = 2048 if SMALL else 16384
+    qd = jax.random.normal(ks[0], (B, H, dh), jnp.bfloat16)
+    kd = jax.random.normal(ks[1], (B, KH, L, dh), jnp.bfloat16)
+    vd = jax.random.normal(ks[2], (B, KH, L, dh), jnp.bfloat16)
+    us = time_fn(lambda *a: ops.decode_attention_op(*a, jnp.asarray(L)),
+                 qd, kd, vd, iters=2)
+    rows.append((f"kernel/decode_attn_L{L}", us, derived(
+        cache_bytes=2 * B * KH * L * dh * 2)))
+
+    Sr, D = (256, 128) if SMALL else (1024, 512)
+    a = jax.random.uniform(ks[0], (B, Sr, D), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (B, Sr, D), jnp.float32)
+    us = time_fn(lambda *x: ops.rglru_scan_op(*x, block_s=128, block_d=128),
+                 a, b, iters=2)
+    us_ref = time_fn(lambda *x: ref.rglru_scan_ref(*x).block_until_ready(),
+                     a, b, iters=2)
+    rows.append((f"kernel/rglru_S{Sr}_D{D}", us, derived(
+        jnp_ref_us=round(us_ref, 1), bytes=3 * B * Sr * D * 4)))
+
+    Bg, P = (8, 1 << 14) if SMALL else (16, 1 << 18)
+    g = jax.random.normal(ks[2], (Bg, P), jnp.float32)
+    us = time_fn(lambda x: ops.dp_clip_accumulate_op(x, 1.0), g, iters=2)
+    rows.append((f"kernel/dp_clip_B{Bg}_P{P}", us, derived(
+        bytes=2 * Bg * P * 4)))
+    return rows

@@ -1,0 +1,52 @@
+"""Scheduler scalability: schedule_round wall time across (M analysts x K
+blocks) — the production regime is K ~ 10^4-10^5 live blocks.  Also times
+the Pallas budget kernels (interpret mode on CPU) against their jnp refs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RoundInputs, SchedulerConfig, schedule_round
+from repro.kernels import ops, ref
+
+from .common import SMALL, derived, time_fn
+
+GRID = [(4, 256, 16), (8, 1024, 16)] if SMALL else \
+    [(4, 256, 16), (8, 1024, 16), (16, 4096, 32), (32, 16384, 32)]
+
+
+def _round(M, K, N, seed=0):
+    rng = np.random.default_rng(seed)
+    demand = (rng.uniform(0, 0.05, (M, N, K)) *
+              (rng.random((M, N, K)) > 0.9)).astype(np.float32)
+    return RoundInputs(
+        demand=jnp.asarray(demand),
+        active=jnp.asarray(demand.sum(-1) > 0),
+        arrival=jnp.zeros((M, N), jnp.float32),
+        loss=jnp.ones((M, N), jnp.float32),
+        capacity=jnp.ones(K, jnp.float32),
+        budget_total=jnp.ones(K, jnp.float32), now=jnp.asarray(0.0))
+
+
+def run() -> list:
+    rows = []
+    for M, K, N in GRID:
+        rnd = _round(M, K, N)
+        cfg = SchedulerConfig(beta=2.2, refine=(M * N * K < 3e7))
+        us = time_fn(lambda r: schedule_round(r, cfg), rnd, iters=3)
+        rows.append((f"sched_scale/M{M}_K{K}_N{N}", us, derived(
+            pipelines=M * N, blocks=K,
+            us_per_pipeline=round(us / (M * N), 2))))
+    # budget kernels at production scale
+    M, K = (256, 4096) if SMALL else (1024, 32768)
+    gamma = jax.random.uniform(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    lam = jax.random.uniform(jax.random.PRNGKey(1), (K,), jnp.float32)
+    us_k = time_fn(lambda g: ops.rowmax_op(g), gamma)
+    us_r = time_fn(lambda g: ref.rowmax_ref(g).block_until_ready(), gamma)
+    rows.append((f"budget_kernel/rowmax_M{M}_K{K}", us_k, derived(
+        jnp_ref_us=round(us_r, 1), bytes=M * K * 4)))
+    us_k = time_fn(lambda g, l: ops.matvec_op(g, l), gamma, lam)
+    us_r = time_fn(lambda g, l: ref.matvec_ref(g, l).block_until_ready(),
+                   gamma, lam)
+    rows.append((f"budget_kernel/matvec_M{M}_K{K}", us_k, derived(
+        jnp_ref_us=round(us_r, 1), flops=2 * M * K)))
+    return rows

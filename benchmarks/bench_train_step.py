@@ -1,0 +1,43 @@
+"""End-to-end train/serve step wall time for the paper-scale FL payload
+(flaas-100m reduced on CPU; the assigned-arch numbers come from the dry-run
+roofline, not wall time — CPU wall time of a 32B model is meaningless)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import init_cache
+from repro.training import (DPConfig, TrainConfig, make_state, serve_step,
+                            train_step)
+
+from .common import SMALL, derived, time_fn
+
+
+def run() -> list:
+    rows = []
+    r = reduced(get_arch("flaas-100m")) if SMALL else get_arch("flaas-100m")
+    B, S = (4, 32) if SMALL else (4, 256)
+    tcfg = TrainConfig(optimizer="adamw", lr=1e-3, param_dtype="float32",
+                       dp=DPConfig(clip=1.0, noise_multiplier=0.5, n_micro=2))
+    state = make_state(jax.random.PRNGKey(0), r, tcfg)
+    step = jax.jit(functools.partial(train_step, cfg=r, tcfg=tcfg))
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, r.vocab, (B, S + 1))
+    batch = {"tokens": jnp.asarray(t[:, :-1]), "labels": jnp.asarray(t[:, 1:])}
+    us = time_fn(step, state, batch, iters=2)
+    n_params = sum(int(np.prod(l.shape)) for l in
+                   jax.tree.leaves(state["params"]))
+    rows.append((f"train_step/{r.name}_B{B}_S{S}", us, derived(
+        params=n_params, tokens_per_s=round(B * S / (us / 1e6)))))
+
+    cache = init_cache(state["params"], r, batch=B, cache_len=S,
+                       dtype=jnp.float32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    sstep = jax.jit(functools.partial(serve_step, cfg=r))
+    us = time_fn(lambda p, t_, c: sstep(p, t_, c, jnp.asarray(0)),
+                 state["params"], tok, cache, iters=3)
+    rows.append((f"serve_step/{r.name}_B{B}", us, derived(
+        tokens_per_s=round(B / (us / 1e6)))))
+    return rows

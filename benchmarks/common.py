@@ -1,0 +1,40 @@
+"""Shared benchmark utilities — timing + CSV row emission."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived "k=v;k=v")
+
+SMALL = bool(int(os.environ.get("BENCH_SMALL", "0")))
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (jit-warm)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        _block(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        _block(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _block(r):
+    import jax
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, r)
+
+
+def derived(**kw) -> str:
+    return ";".join(f"{k}={v}" for k, v in kw.items())
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, d in rows:
+        print(f"{name},{us:.1f},{d}")

@@ -1,0 +1,27 @@
+"""Benchmark harness — one module per paper table/figure + systems benches.
+
+Prints ``name,us_per_call,derived`` CSV.  BENCH_SMALL=1 shrinks workloads
+(used by CI); the full run reproduces the paper's §VI comparison numbers.
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_fig2, bench_fig4_5, bench_fig6, bench_kernels,
+                   bench_scheduler_scale, bench_train_step)
+    from .common import emit
+
+    print("name,us_per_call,derived")
+    for mod in (bench_fig2, bench_fig4_5, bench_fig6, bench_scheduler_scale,
+                bench_kernels, bench_train_step):
+        try:
+            emit(mod.run())
+        except Exception as e:  # keep the harness alive per-table
+            traceback.print_exc()
+            print(f"{mod.__name__},NaN,error={type(e).__name__}",
+                  file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

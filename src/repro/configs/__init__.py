@@ -1,0 +1,32 @@
+"""Architecture registry: --arch <id> resolves here."""
+from .base import (ArchConfig, EncoderSpec, LM_SHAPES, MoESpec, ShapeSpec,
+                   reduced, shapes_for)
+from .recurrentgemma_2b import CONFIG as recurrentgemma_2b
+from .xlstm_125m import CONFIG as xlstm_125m
+from .qwen2_5_32b import CONFIG as qwen2_5_32b
+from .starcoder2_3b import CONFIG as starcoder2_3b
+from .starcoder2_15b import CONFIG as starcoder2_15b
+from .qwen2_5_3b import CONFIG as qwen2_5_3b
+from .whisper_medium import CONFIG as whisper_medium
+from .kimi_k2_1t_a32b import CONFIG as kimi_k2_1t_a32b
+from .mixtral_8x22b import CONFIG as mixtral_8x22b
+from .llama_3_2_vision_11b import CONFIG as llama_3_2_vision_11b
+from .flaas_100m import CONFIG as flaas_100m
+
+ARCHS = {c.name: c for c in [
+    recurrentgemma_2b, xlstm_125m, qwen2_5_32b, starcoder2_3b,
+    starcoder2_15b, qwen2_5_3b, whisper_medium, kimi_k2_1t_a32b,
+    mixtral_8x22b, llama_3_2_vision_11b, flaas_100m,
+]}
+
+ASSIGNED = tuple(n for n in ARCHS if n != "flaas-100m")
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "EncoderSpec", "MoESpec", "ShapeSpec", "LM_SHAPES",
+           "ARCHS", "ASSIGNED", "get_arch", "reduced", "shapes_for"]

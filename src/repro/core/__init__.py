@@ -1,0 +1,26 @@
+"""DPBalance core — the paper's contribution as a composable JAX module."""
+from .demand import (AnalystView, RoundInputs, analyst_demand,
+                     analyst_max_share, normalized_demand,
+                     pipeline_max_share)
+from .utility import (alpha_fair_objective, analyst_utility, default_lambda,
+                      dominant_efficiency, dominant_fairness, jain_index,
+                      platform_utility)
+from .waterfill import WaterfillResult, alpha_fair_waterfill
+from .packing import PackResult, exact_pack, greedy_cover, pack_all, pack_analyst
+from .scheduler import RoundResult, SchedulerConfig, schedule_round
+from . import baselines
+from .baselines import dpf_round, dpk_round, fcfs_round
+from .simulation import FlaasSimulator, SimConfig, run_simulation
+
+baselines.SCHEDULERS["dpbalance"] = schedule_round
+
+__all__ = [
+    "AnalystView", "RoundInputs", "analyst_demand", "analyst_max_share",
+    "normalized_demand", "pipeline_max_share", "alpha_fair_objective",
+    "analyst_utility", "default_lambda", "dominant_efficiency",
+    "dominant_fairness", "jain_index", "platform_utility", "WaterfillResult",
+    "alpha_fair_waterfill", "PackResult", "exact_pack", "greedy_cover",
+    "pack_all", "pack_analyst", "RoundResult", "SchedulerConfig",
+    "schedule_round", "dpf_round", "dpk_round", "fcfs_round",
+    "FlaasSimulator", "SimConfig", "run_simulation",
+]

@@ -1,0 +1,112 @@
+"""Baseline privacy-budget schedulers from the paper's evaluation (§VI):
+
+* DPF  [Luo et al., OSDI'21]  — grant the pending pipeline with the smallest
+  dominant share first (max-min fairness at the pipeline level).
+* DPK  [Tholoniat et al., "Packing privacy budget"] — grant pipelines with the
+  lowest weight-to-demand ratio first (efficiency/packing oriented; smallest
+  total demand per unit weight gets in first).
+* FCFS — grant in arrival order.
+
+All three operate at the pipeline level with x_ij = 1 grants (no boost), which
+is how the paper characterizes them in Fig. 2.  They share the same
+RoundResult schema as DPBalance so every metric is directly comparable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import demand as dm
+from . import utility as ut
+from .scheduler import RoundResult, SchedulerConfig
+
+_EPS = 1e-9
+_FEAS = 1e-6
+_BIG = 1e30
+
+
+def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn):
+    """Flatten pipelines, sort by key_fn ascending, grant-if-fits scan."""
+    M, N, K = rnd.demand.shape
+    gamma = dm.normalized_demand(rnd.demand, rnd.budget_total)
+    mu_ij = dm.pipeline_max_share(gamma)
+    cap_frac = rnd.capacity / jnp.maximum(rnd.budget_total, _EPS)
+
+    active = rnd.active & ~jnp.any(gamma > cap_frac[None, None, :] + _FEAS, -1)
+    key = key_fn(rnd, gamma, mu_ij)                      # [M, N]
+    key = jnp.where(active, key, _BIG).reshape(-1)
+    order = jnp.argsort(key)
+    gflat = gamma.reshape(M * N, K)
+    aflat = active.reshape(-1)
+
+    def step(remaining, idx):
+        dem = gflat[idx]
+        ok = aflat[idx] & jnp.all(dem <= remaining + _FEAS)
+        remaining = jnp.where(ok, remaining - dem, remaining)
+        return remaining, ok
+
+    _, taken = jax.lax.scan(step, cap_frac, order)
+    sel = jnp.zeros((M * N,), bool).at[order].set(taken).reshape(M, N)
+    x_ij = sel.astype(gamma.dtype)
+
+    grants = rnd.demand * x_ij[..., None]
+    consumed = jnp.sum(grants, axis=(0, 1))
+    leftover = jnp.maximum(rnd.capacity - consumed, 0.0)
+
+    view = dm.AnalystView.build(
+        dm.RoundInputs(rnd.demand, active, rnd.arrival, rnd.loss,
+                       rnd.capacity, rnd.budget_total, rnd.now), cfg.tau)
+    realized = jnp.sum(gamma * x_ij[..., None], axis=1)
+    mu_real = jnp.max(realized, axis=-1)
+    util = mu_real * view.a_i * view.mask
+    eff = ut.dominant_efficiency(util, view.mask)
+    fair = ut.dominant_fairness(util, cfg.beta, view.mask)
+    plat = ut.platform_utility(util, cfg.beta, cfg.effective_lambda(), view.mask)
+    zeros_m = jnp.zeros((M,), gamma.dtype)
+    return RoundResult(
+        x_analyst=zeros_m, x_pipeline=x_ij, selected=sel, grants=grants,
+        consumed=consumed, utility=util, efficiency=eff, fairness=fair,
+        platform=plat, jain=ut.jain_index(util, view.mask),
+        n_allocated=jnp.sum(sel), leftover=leftover,
+        sp1_violation=jnp.zeros(()))
+
+
+def _dpf_key(rnd, gamma, mu_ij):
+    return mu_ij                                   # smallest dominant share
+
+
+def _dpk_key(rnd, gamma, mu_ij):
+    total = jnp.sum(gamma, axis=-1)                # total normalized demand
+    return total                                   # lowest demand packs first
+
+
+def _fcfs_key(rnd, gamma, mu_ij):
+    return rnd.arrival                             # earliest arrival first
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled(cfg: SchedulerConfig, name: str):
+    key_fn = {"dpf": _dpf_key, "dpk": _dpk_key, "fcfs": _fcfs_key}[name]
+    return jax.jit(functools.partial(_sequential_grant, cfg=cfg, key_fn=key_fn))
+
+
+def dpf_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
+    return _compiled(cfg, "dpf")(rnd)
+
+
+def dpk_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
+    return _compiled(cfg, "dpk")(rnd)
+
+
+def fcfs_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
+    return _compiled(cfg, "fcfs")(rnd)
+
+
+SCHEDULERS = {
+    "dpbalance": None,  # filled in core/__init__ to avoid a cycle
+    "dpf": dpf_round,
+    "dpk": dpk_round,
+    "fcfs": fcfs_round,
+}

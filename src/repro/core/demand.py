@@ -1,0 +1,108 @@
+"""Demand model for privacy-budget scheduling (paper §IV, Defs 5-6).
+
+Shapes (padded, fixed per round):
+    M — data analysts, N — pipelines per analyst (padded), K — data blocks.
+
+`demand[M, N, K]` is the raw privacy demand (epsilon, RDP units) pipeline j of
+analyst i places on block k; zero where the pipeline does not touch the block.
+`capacity[K]` is the *remaining* privacy budget of each block.  Normalized
+demand gamma = demand / capacity_total (the paper normalizes against the block's
+total budget so shares are comparable across blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoundInputs:
+    """Everything the scheduler sees for one allocation round."""
+
+    demand: Array        # [M, N, K] raw epsilon demand
+    active: Array        # [M, N] bool — pipeline exists and is pending
+    arrival: Array       # [M, N] arrival time of each pipeline (seconds)
+    loss: Array          # [M, N] matching degree l_ij in (0, 1]
+    capacity: Array      # [K] remaining budget of each block (epsilon)
+    budget_total: Array  # [K] the block's *total* budget (normalization base)
+    now: Array           # scalar — current time (seconds)
+
+    @property
+    def shape(self):
+        return self.demand.shape
+
+
+def normalized_demand(demand: Array, budget_total: Array) -> Array:
+    """gamma_ij^<k> = demand / total block budget (Def 5).  [M, N, K]."""
+    return demand / jnp.maximum(budget_total, _EPS)[None, None, :]
+
+
+def pipeline_max_share(gamma: Array) -> Array:
+    """mu_ij = max_k gamma_ij^<k>  (Eq. 3).  [M, N]."""
+    return jnp.max(gamma, axis=-1)
+
+
+def analyst_demand(gamma: Array, active: Array) -> Array:
+    """Assembled analyst demand gamma_i^<k> = sum_j gamma_ij^<k> (Eq. 15 at
+    x_ij = 1, over active pipelines).  [M, K]."""
+    return jnp.sum(gamma * active[..., None], axis=1)
+
+
+def analyst_max_share(gamma_i: Array) -> Array:
+    """mu_i = max_k gamma_i^<k>  (Eq. 4).  [M]."""
+    return jnp.max(gamma_i, axis=-1)
+
+
+def waiting_coefficient(arrival: Array, now: Array, tau: float) -> Array:
+    """T(t) — any monotone decreasing function of waiting time (Def 8).
+
+    We use T(t) = exp(-t / tau); tau is a platform knob (seconds).
+    """
+    wait = jnp.maximum(now - arrival, 0.0)
+    return jnp.exp(-wait / tau)
+
+
+def analyst_waiting(arrival: Array, active: Array, now: Array) -> Array:
+    """Average delay t_i over an analyst's pending pipelines (Def 10)."""
+    wait = jnp.maximum(now - arrival, 0.0) * active
+    denom = jnp.maximum(jnp.sum(active, axis=1), 1.0)
+    return jnp.sum(wait, axis=1) / denom
+
+
+def analyst_loss(loss: Array, mu_ij: Array, active: Array) -> Array:
+    """l_i — mu-weighted average of the analyst's pipeline matching degrees
+    (Eq. 6's functional form lifted to the analyst level)."""
+    w = mu_ij * active
+    denom = jnp.maximum(jnp.sum(w, axis=1), _EPS)
+    return jnp.sum(w * loss, axis=1) / denom
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalystView:
+    """Per-analyst aggregates consumed by the SP1 water-filling solver."""
+
+    gamma_i: Array   # [M, K] assembled normalized demand
+    mu_i: Array      # [M]    analyst dominant-share coefficient
+    a_i: Array       # [M]    T(t_i) * l_i weight
+    mask: Array      # [M]    analyst has any active demand
+
+    @classmethod
+    def build(cls, rnd: RoundInputs, tau: float) -> "AnalystView":
+        gamma = normalized_demand(rnd.demand, rnd.budget_total)
+        mu_ij = pipeline_max_share(gamma)
+        g_i = analyst_demand(gamma, rnd.active)
+        mu_i = analyst_max_share(g_i)
+        t_i = analyst_waiting(rnd.arrival, rnd.active, rnd.now)
+        T_i = jnp.exp(-t_i / tau)
+        l_i = analyst_loss(rnd.loss, mu_ij, rnd.active)
+        a_i = T_i * l_i
+        mask = jnp.sum(rnd.active, axis=1) > 0
+        return cls(gamma_i=g_i, mu_i=mu_i, a_i=a_i, mask=mask)

@@ -1,0 +1,153 @@
+"""SP2 — pipeline-level reallocation inside each analyst (paper Eqs 20-24).
+
+Given the analyst's granted budget vector (from SP1), pick the pipeline set:
+
+    (Eq 23)  maximize the NUMBER of covered pipelines, then
+    (Eq 20)  maximize sum_j mu_ij x_ij a_ij over the chosen set, x_ij >= 1
+             (one-or-more property, Eq 5), returning unused budget.
+
+The paper uses a greedy heuristic for Eq 23 and Gurobi for Eq 20.  We use:
+
+* greedy cover by ascending mu_ij (classic max-count packing heuristic),
+* a single-swap refinement pass that keeps the count but may improve the
+  boosted Eq-20 objective (this is what picks Bob's P3 over P4 in Fig 2),
+* closed-form sequential proportional boost for Eq 20: each selected pipeline
+  in descending mu_ij a_ij order receives kappa_j = min_k leftover_k /
+  gamma_jk extra, capped at kappa_max.  With a single selected pipeline this
+  is exactly the paper's kappa (Bob's P3: kappa = 1.25).
+
+Everything is lax.scan / vmap based so the whole SP2 stage jit-compiles and
+vmaps over analysts.  An exact exhaustive oracle (numpy) lives in
+``exact_pack`` for tests on small N.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-9
+_FEAS = 1e-6  # feasibility slack (float32 headroom on normalized shares)
+_BIG = 1e30
+
+
+class PackResult(NamedTuple):
+    x_ij: jax.Array       # [N] per-pipeline allocation ratio (0 or >= 1)
+    selected: jax.Array   # [N] bool
+    used: jax.Array       # [K] budget consumed
+    objective: jax.Array  # scalar Eq-20 value
+
+
+def greedy_cover(gamma, mu, active, budget):
+    """Select max-count pipeline set by ascending-mu greedy.  [N,K]->[N] bool."""
+    N = mu.shape[0]
+    key = jnp.where(active, mu, _BIG)
+    order = jnp.argsort(key)
+
+    def step(remaining, idx):
+        dem = gamma[idx]
+        ok = active[idx] & jnp.all(dem <= remaining + _FEAS)
+        remaining = jnp.where(ok, remaining - dem, remaining)
+        return remaining, ok
+
+    _, taken = jax.lax.scan(step, budget, order)
+    sel = jnp.zeros((N,), bool).at[order].set(taken)
+    return sel & active
+
+
+def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float):
+    """Eq 20 heuristic: x=1 for selected, then greedy kappa boosts in
+    descending mu*a order.  Returns (x_ij, used, objective)."""
+    base_used = jnp.sum(gamma * sel[:, None], axis=0)
+    leftover = budget - base_used
+
+    key = jnp.where(sel, -(mu * a), _BIG)  # descending mu*a among selected
+    order = jnp.argsort(key)
+
+    def step(leftover, idx):
+        dem = gamma[idx]
+        ratio = jnp.where(dem > _EPS, leftover / jnp.maximum(dem, _EPS), jnp.inf)
+        extra = jnp.clip(jnp.min(ratio), 0.0, kappa_max - 1.0)
+        extra = jnp.where(sel[idx], extra, 0.0)
+        leftover = leftover - extra * dem
+        return leftover, extra
+
+    leftover, extras = jax.lax.scan(step, leftover, order)
+    x = jnp.zeros_like(mu).at[order].set(extras)
+    x = jnp.where(sel, 1.0 + x, 0.0)
+    used = jnp.sum(gamma * x[:, None], axis=0)
+    obj = jnp.sum(mu * a * x * sel)
+    return x, used, obj
+
+
+def _boost_objective(gamma, mu, a, active, sel, budget, kappa_max):
+    _, _, obj = proportional_boost(gamma, mu, a, active, sel, budget, kappa_max)
+    return obj
+
+
+def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float):
+    """Single-swap local search: for every (selected s, unselected u) try
+    sel - {s} + {u}; keep the feasible candidate with the best boosted
+    objective.  Count is preserved by construction."""
+    N = mu.shape[0]
+    s_idx, u_idx = jnp.meshgrid(jnp.arange(N), jnp.arange(N), indexing="ij")
+    s_flat, u_flat = s_idx.reshape(-1), u_idx.reshape(-1)
+
+    def make_candidate(s, u):
+        cand = sel.at[s].set(False).at[u].set(True)
+        valid = sel[s] & (~sel[u]) & active[u] & (s != u)
+        used = jnp.sum(gamma * cand[:, None], axis=0)
+        feasible = jnp.all(used <= budget + _FEAS)
+        return cand, valid & feasible
+
+    cands, valids = jax.vmap(make_candidate)(s_flat, u_flat)
+    objs = jax.vmap(
+        lambda c: _boost_objective(gamma, mu, a, active, c, budget, kappa_max)
+    )(cands)
+    objs = jnp.where(valids, objs, -_BIG)
+    base_obj = _boost_objective(gamma, mu, a, active, sel, budget, kappa_max)
+    best = jnp.argmax(objs)
+    improved = objs[best] > base_obj + 1e-12
+    return jnp.where(improved, cands[best], sel)
+
+
+@functools.partial(jax.jit, static_argnames=("kappa_max", "refine"))
+def pack_analyst(gamma, mu, a, active, budget,
+                 kappa_max: float = 8.0, refine: bool = True) -> PackResult:
+    """Full SP2 for one analyst.  vmap over analysts for the batched version."""
+    sel = greedy_cover(gamma, mu, active, budget)
+    if refine:
+        sel = swap_refine(gamma, mu, a, active, sel, budget, kappa_max)
+    x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget, kappa_max)
+    return PackResult(x_ij=x, selected=sel, used=used, objective=obj)
+
+
+pack_all = jax.vmap(pack_analyst, in_axes=(0, 0, 0, 0, 0, None, None), out_axes=0)
+
+
+def exact_pack(gamma, mu, a, active, budget, kappa_max: float = 8.0):
+    """Exhaustive oracle for tests (N <= 20): enumerate subsets, maximize
+    count then boosted objective (boost via the same sequential heuristic)."""
+    gamma, mu, a = map(np.asarray, (gamma, mu, a))
+    active, budget = np.asarray(active), np.asarray(budget)
+    N = mu.shape[0]
+    idxs = [j for j in range(N) if active[j]]
+    best = (0, -np.inf, np.zeros(N, bool))
+    for bits in range(1 << len(idxs)):
+        sel = np.zeros(N, bool)
+        for p, j in enumerate(idxs):
+            if bits >> p & 1:
+                sel[j] = True
+        used = (gamma * sel[:, None]).sum(0)
+        if np.any(used > budget + 1e-6):
+            continue
+        x, _, obj = proportional_boost(
+            jnp.asarray(gamma), jnp.asarray(mu), jnp.asarray(a),
+            jnp.asarray(active), jnp.asarray(sel), jnp.asarray(budget), kappa_max)
+        cand = (int(sel.sum()), float(obj), sel)
+        if (cand[0], cand[1]) > (best[0], best[1]):
+            best = cand
+    return best[2], best[0], best[1]

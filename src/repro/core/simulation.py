@@ -1,0 +1,201 @@
+"""Paper §VI simulation environment.
+
+Setup (verbatim from the paper):
+  * 100 edge devices; per-device global budget eps_g ~ U(1.0, 1.5); every
+    device's blocks inherit the device budget (eps_ij^g = eps_i^g).
+  * 2 new blocks per device every 10 s (one round = 10 s).
+  * 6 data analysts x 25 pipelines arriving via a Poisson process (rate: one
+    analyst batch per round on average), 10 rounds.
+  * 75% mice pipelines (eps ~ U(0.005, 0.015)), 25% elephant
+    (eps ~ U(0.095, 0.105)).
+  * A pipeline demands the latest 10 blocks w.p. 0.25, else the latest 1.
+  * An analyst targets 20% of devices w.p. 0.5, else all devices.
+
+The simulator is deterministic given a numpy seed and drives any scheduler
+with the same RoundInputs, accumulating the paper's four metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import numpy as np
+import jax.numpy as jnp
+
+from .demand import RoundInputs
+from .scheduler import RoundResult, SchedulerConfig, schedule_round
+from . import baselines
+
+ROUND_SECONDS = 10.0
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_devices: int = 100
+    blocks_per_round_per_device: int = 2
+    n_analysts: int = 6
+    pipelines_per_analyst: int = 25
+    n_rounds: int = 10
+    mice_frac: float = 0.75
+    mice_eps: tuple = (0.005, 0.015)
+    elephant_eps: tuple = (0.095, 0.105)
+    budget_range: tuple = (1.0, 1.5)
+    p_ten_blocks: float = 0.25
+    p_subset_devices: float = 0.5
+    subset_frac: float = 0.2
+    seed: int = 0
+    pad_blocks: bool = True  # pre-size K so shapes are static (one jit compile)
+
+
+@dataclasses.dataclass
+class _Pipeline:
+    analyst: int
+    arrival: float
+    loss: float
+    demands: Dict[int, float]  # block id -> eps demand
+    done: bool = False
+
+
+class FlaasSimulator:
+    """Round-based environment; pending pipelines persist across rounds."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.device_budget = self.rng.uniform(*cfg.budget_range, cfg.n_devices)
+        self.block_budget: List[float] = []   # total budget per block
+        self.block_capacity: List[float] = [] # remaining budget per block
+        self.block_device: List[int] = []
+        self.blocks_by_device: List[List[int]] = [[] for _ in range(cfg.n_devices)]
+        self.pipelines: List[_Pipeline] = []
+        self.now = 0.0
+        self._arrived = 0
+
+    # ------------------------------------------------------------------ env
+    def _grow_blocks(self):
+        for dev in range(self.cfg.n_devices):
+            for _ in range(self.cfg.blocks_per_round_per_device):
+                bid = len(self.block_budget)
+                self.block_budget.append(float(self.device_budget[dev]))
+                self.block_capacity.append(float(self.device_budget[dev]))
+                self.block_device.append(dev)
+                self.blocks_by_device[dev].append(bid)
+
+    def _spawn_pipelines(self):
+        cfg, rng = self.cfg, self.rng
+        n_new = min(rng.poisson(1.0), cfg.n_analysts - self._arrived)
+        for _ in range(max(n_new, 1 if self._arrived == 0 else 0)):
+            if self._arrived >= cfg.n_analysts:
+                break
+            aid = self._arrived
+            self._arrived += 1
+            subset = rng.random() < cfg.p_subset_devices
+            n_dev = max(1, int(cfg.subset_frac * cfg.n_devices)) if subset \
+                else cfg.n_devices
+            devices = rng.choice(cfg.n_devices, size=n_dev, replace=False)
+            for _ in range(cfg.pipelines_per_analyst):
+                mice = rng.random() < cfg.mice_frac
+                lo, hi = cfg.mice_eps if mice else cfg.elephant_eps
+                depth = 10 if rng.random() < cfg.p_ten_blocks else 1
+                demands: Dict[int, float] = {}
+                for dev in devices:
+                    blocks = self.blocks_by_device[dev][-depth:]
+                    for bid in blocks:
+                        demands[bid] = float(rng.uniform(lo, hi))
+                self.pipelines.append(_Pipeline(
+                    analyst=aid, arrival=self.now,
+                    loss=float(rng.uniform(0.5, 1.0)), demands=demands))
+
+    # ------------------------------------------------------------- interface
+    def round_inputs(self) -> RoundInputs:
+        cfg = self.cfg
+        K = len(self.block_budget)
+        if cfg.pad_blocks:  # static K across rounds -> single jit compile
+            K = cfg.n_devices * cfg.blocks_per_round_per_device * cfg.n_rounds
+        M, N = cfg.n_analysts, cfg.pipelines_per_analyst
+        demand = np.zeros((M, N, K), np.float32)
+        active = np.zeros((M, N), bool)
+        arrival = np.zeros((M, N), np.float32)
+        loss = np.ones((M, N), np.float32)
+        slot = [0] * M
+        self._slot_of: Dict[int, tuple] = {}
+        for pid, p in enumerate(self.pipelines):
+            if p.done:
+                continue
+            i, j = p.analyst, slot[p.analyst]
+            if j >= N:
+                continue
+            slot[p.analyst] += 1
+            self._slot_of[pid] = (i, j)
+            active[i, j] = True
+            arrival[i, j] = p.arrival
+            loss[i, j] = p.loss
+            for bid, eps in p.demands.items():
+                demand[i, j, bid] = eps
+        cap = np.zeros(K, np.float32)
+        tot = np.ones(K, np.float32)  # padded blocks: budget 1, capacity 0
+        kreal = len(self.block_budget)
+        cap[:kreal] = np.asarray(self.block_capacity, np.float32)
+        tot[:kreal] = np.asarray(self.block_budget, np.float32)
+        return RoundInputs(
+            demand=jnp.asarray(demand), active=jnp.asarray(active),
+            arrival=jnp.asarray(arrival), loss=jnp.asarray(loss),
+            capacity=jnp.asarray(cap), budget_total=jnp.asarray(tot),
+            now=jnp.asarray(self.now, jnp.float32))
+
+    def apply(self, result: RoundResult):
+        consumed = np.asarray(result.consumed)[: len(self.block_capacity)]
+        cap = np.asarray(self.block_capacity)
+        self.block_capacity = list(np.maximum(cap - consumed, 0.0))
+        selected = np.asarray(result.selected)
+        for pid, (i, j) in self._slot_of.items():
+            if selected[i, j]:
+                self.pipelines[pid].done = True
+
+    def step_time(self):
+        self.now += ROUND_SECONDS
+
+
+def run_simulation(scheduler: str, sim_cfg: SimConfig,
+                   sched_cfg: SchedulerConfig) -> Dict[str, np.ndarray]:
+    """Drive `scheduler` in {'dpbalance','dpf','dpk','fcfs'} for n_rounds.
+
+    Returns per-round and cumulative efficiency/fairness (+ jain, #allocated).
+    """
+    fns: Dict[str, Callable] = {
+        "dpbalance": lambda r, c: schedule_round(r, c),
+        "dpf": baselines.dpf_round,
+        "dpk": baselines.dpk_round,
+        "fcfs": baselines.fcfs_round,
+    }
+    from .utility import normalized_fairness
+
+    fn = fns[scheduler]
+    sim = FlaasSimulator(sim_cfg)
+    eff, fair, fnorm, jain, nalloc, leftover = [], [], [], [], [], []
+    for _ in range(sim_cfg.n_rounds):
+        sim._grow_blocks()
+        sim._spawn_pipelines()
+        rnd = sim.round_inputs()
+        res = fn(rnd, sched_cfg)
+        sim.apply(res)
+        mask = jnp.sum(rnd.active, axis=1) > 0
+        eff.append(float(res.efficiency))
+        fair.append(float(res.fairness))
+        fnorm.append(float(normalized_fairness(res.utility, sched_cfg.beta, mask)))
+        jain.append(float(res.jain))
+        nalloc.append(int(res.n_allocated))
+        leftover.append(float(np.sum(np.asarray(res.leftover))))
+        sim.step_time()
+    eff, fair, fnorm = np.asarray(eff), np.asarray(fair), np.asarray(fnorm)
+    return {
+        "round_efficiency": eff,
+        "round_fairness": fair,
+        "round_fairness_norm": fnorm,
+        "cumulative_efficiency": np.cumsum(eff),
+        "cumulative_fairness": np.cumsum(fair),
+        "cumulative_fairness_norm": np.cumsum(fnorm),
+        "round_jain": np.asarray(jain),
+        "n_allocated": np.asarray(nalloc),
+        "leftover": np.asarray(leftover),
+    }

@@ -1,0 +1,109 @@
+"""Utility / fairness / efficiency metrics (paper §IV-D/E, Eqs 7-12).
+
+All functions are pure jnp and jit-compatible.  Conventions:
+
+* ``U_i = mu_i * x_i * T(t_i) * l_i``  (Def 8) — analyst efficiency.
+* Dominant efficiency  E = sum_i U_i  (Def 9, Eq 8).
+* Dominant fairness  f_beta  (Def 10, Eq 9) — signed; **larger is fairer** in
+  both beta regimes (beta<1: f in (1, m]; beta>1: f in (-inf, -m], max at -m
+  when perfectly fair).  beta = 1 is a pole of Eq. 9; callers must nudge
+  (we assert beta != 1 at trace time).
+* Platform utility  Psi_lambda = f_beta * E^lambda  (Eq 10).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def analyst_utility(mu_i, x_i, a_i):
+    """U_i(x_i) = mu_i x_i T(t_i) l_i  — Eq 7 (a_i = T(t_i) l_i)."""
+    return mu_i * x_i * a_i
+
+
+def dominant_efficiency(util, mask=None):
+    """Eq 8: platform dominant efficiency = sum of analyst utilities."""
+    if mask is not None:
+        util = util * mask
+    return jnp.sum(util, axis=-1)
+
+
+def dominant_fairness(util, beta: float, mask=None):
+    """Eq 9: f_beta(x) = sgn(1-beta) * ( sum_i (U_i / sum U)^(1-beta) )^(1/beta).
+
+    Masked-out analysts contribute nothing.  Zero-utility analysts under
+    beta > 1 drive f to -inf (maximal unfairness); we clamp shares at _EPS so
+    the value stays finite but strongly penalized.
+    """
+    assert beta != 1.0, "beta = 1 is a pole of Eq. 9 — nudge (e.g. 1 +/- 1e-3)"
+    if mask is None:
+        mask = jnp.ones_like(util, dtype=bool)
+    mask = mask.astype(util.dtype)
+    u = util * mask
+    total = jnp.maximum(jnp.sum(u, axis=-1, keepdims=True), _EPS)
+    # Share floor: a zero-utility analyst drives Eq 9 to -inf under beta > 1;
+    # we clamp shares at 1e-6 so the metric stays finite (documented deviation).
+    share = jnp.clip(u / total, 1e-6, 1.0)
+    # masked analysts must not contribute to the sum: raise their share term to
+    # exactly zero by zeroing after the power.
+    powered = jnp.where(mask > 0, share ** (1.0 - beta), 0.0)
+    s = jnp.sum(powered, axis=-1)
+    sgn = jnp.sign(1.0 - beta)
+    return sgn * jnp.maximum(s, _EPS) ** (1.0 / beta)
+
+
+def platform_utility(util, beta: float, lam: float, mask=None):
+    """Eq 10: Psi = f_beta(x) * (sum_i U_i)^lambda  (signed-log form of App. A)."""
+    f = dominant_fairness(util, beta, mask)
+    e = jnp.maximum(dominant_efficiency(util, mask), _EPS)
+    return jnp.sign(f) * jnp.abs(f) * e ** lam
+
+
+def alpha_fair_objective(util, beta: float, mask=None):
+    """Eq 12: sum_i U_i^(1-beta) / (1-beta) — the alpha-fairness program that
+    Psi degenerates to at lambda = |1-beta|/beta.  beta=1 -> sum log U."""
+    if mask is None:
+        mask = jnp.ones_like(util, dtype=bool)
+    u = jnp.maximum(util, _EPS)
+    if abs(beta - 1.0) < 1e-9:
+        terms = jnp.log(u)
+    else:
+        terms = u ** (1.0 - beta) / (1.0 - beta)
+    return jnp.sum(jnp.where(mask, terms, 0.0), axis=-1)
+
+
+def normalized_fairness(util, beta: float, mask=None):
+    """Map the signed Eq-9 value onto (0, 1], 1 = perfectly fair, so fairness
+    *improvement ratios* (paper Fig 5) are well-defined positive numbers.
+
+    beta > 1:  f in (-inf, -m]  ->  f_norm = -m / f
+    beta < 1:  f in (1, m]      ->  f_norm = f / m
+    """
+    if mask is None:
+        mask = jnp.ones_like(util, dtype=bool)
+    m = jnp.maximum(jnp.sum(mask.astype(util.dtype), axis=-1), 1.0)
+    f = dominant_fairness(util, beta, mask)
+    if beta > 1.0:
+        return -m / jnp.minimum(f, -m)
+    return jnp.clip(f / m, 0.0, 1.0)
+
+
+def jain_index(util, mask=None):
+    """Jain's fairness index — auxiliary [0,1] fairness used for reporting
+    improvement ratios on a positive scale (the signed Eq-9 value is awkward
+    in ratios).  1 = perfectly fair."""
+    if mask is None:
+        mask = jnp.ones_like(util, dtype=bool)
+    m = mask.astype(util.dtype)
+    u = util * m
+    n = jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    num = jnp.sum(u, axis=-1) ** 2
+    den = jnp.maximum(n * jnp.sum(u * u, axis=-1), _EPS)
+    return num / den
+
+
+def default_lambda(beta: float) -> float:
+    """lambda = |1-beta|/beta — the setting under which Eq 10 reduces to Eq 12
+    and (for beta>1) all four economic properties hold (Thms 1-4)."""
+    return abs(1.0 - beta) / beta

@@ -1,0 +1,109 @@
+"""SP1 — analyst-level alpha-fair allocation via the Lagrange-multiplier method.
+
+Solves (paper Eqs 17-19, the continuous relaxation of Eq 13):
+
+    max   sum_i (mu_i a_i x_i)^(1-beta) / (1-beta)
+    s.t.  sum_i c_ik x_i <= 1   for every block k
+          x_i >= 0
+
+where c_ik is the per-unit consumption of analyst i on block k —
+``gamma_i^<k>`` (physical mode) or ``gamma_i^<k> a_i`` (the paper's literal
+Eq 14, ``weighted_constraints=True``; see DESIGN.md §8).
+
+KKT stationarity gives the closed form of the paper's Appendix B (Eq 39):
+
+    x_i(lambda) = [ (mu_i a_i)^(1-beta) / sum_k lambda_k c_ik ]^(1/beta)
+
+and we drive the multipliers by **projected multiplicative dual ascent**
+
+    lambda_k <- lambda_k * exp(eta * (sum_i c_ik x_i(lambda) - 1))
+
+which keeps lambda > 0, lets slack constraints decay to ~0, and converges for
+beta > 0 (strictly concave objective).  Everything is vectorized over [M, K]
+and compiled with lax.while_loop — the solver itself runs on device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+class WaterfillResult(NamedTuple):
+    x: jax.Array          # [M] allocation ratios
+    lam: jax.Array        # [K] final multipliers
+    violation: jax.Array  # scalar max constraint violation
+    iters: jax.Array      # iterations executed
+
+
+def _x_of_lambda(lam, c, w_pow, beta, xcap, mask):
+    """x_i(lambda) from KKT stationarity, clipped to the per-analyst cap."""
+    denom = jnp.maximum(c @ lam, _EPS)           # [M]
+    x = (w_pow / denom) ** (1.0 / beta)
+    x = jnp.minimum(x, xcap)
+    return jnp.where(mask, x, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "max_iters", "tol"))
+def alpha_fair_waterfill(
+    mu: jax.Array,          # [M] analyst dominant-share coefficient
+    a: jax.Array,           # [M] T(t_i) l_i weights
+    c: jax.Array,           # [M, K] per-unit consumption on each block
+    mask: jax.Array,        # [M] bool — analyst participates
+    cap: jax.Array | None = None,  # [K] remaining capacity fraction (default 1)
+    beta: float = 2.2,
+    max_iters: int = 4000,
+    tol: float = 1e-6,
+) -> WaterfillResult:
+    """Solve SP1.  Returns ratios x_i >= 0 with sum_i c_ik x_i <= cap_k."""
+    assert beta > 0, "alpha-fairness requires beta > 0"
+    M, K = c.shape
+    if cap is None:
+        cap = jnp.ones((K,), dtype=c.dtype)
+    w = jnp.maximum(mu * a, _EPS)
+    w_pow = jnp.where(mask, w ** (1.0 - beta), 0.0)
+
+    # x_i <= min_k cap_k / c_ik is necessary for feasibility (others use >= 0).
+    ratio = jnp.where(c > _EPS, cap[None, :] / jnp.maximum(c, _EPS), jnp.inf)
+    xcap = jnp.min(ratio, axis=1)
+    cmax = jnp.max(c, axis=1)
+    mask = mask & (cmax > _EPS) & jnp.isfinite(xcap)
+    xcap = jnp.where(mask, xcap, 0.0)
+
+    lam0 = jnp.ones((K,), dtype=c.dtype)
+    cap_safe = jnp.maximum(cap, _EPS)
+
+    def cond(state):
+        lam, it, viol = state
+        return (it < max_iters) & (viol > tol)
+
+    def body(state):
+        lam, it, _ = state
+        x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask)
+        g = (x @ c - cap) / cap_safe             # [K] relative violation
+        eta = 0.5 / (1.0 + 0.001 * it)           # decaying multiplicative step
+        lam_new = lam * jnp.exp(eta * g)
+        lam_new = jnp.clip(lam_new, 1e-12, 1e12)
+        # KKT error: primal feasibility AND complementary slackness.  Checking
+        # feasibility alone would accept lam=1 on an underloaded system.
+        feas = jnp.max(jnp.maximum(g, 0.0))
+        comp = jnp.max(lam_new * jnp.abs(g))
+        viol = jnp.maximum(feas, comp)
+        return lam_new, it + 1, viol
+
+    lam, iters, _ = jax.lax.while_loop(
+        cond, body, (lam0, jnp.array(0), jnp.array(jnp.inf, dtype=c.dtype))
+    )
+    x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask)
+
+    # Final exact projection: uniform scale-down of any residual overshoot so
+    # the output is *always* feasible (privacy budgets must never overdraw).
+    load = x @ c                                  # [K]
+    ratio = jnp.where(load > cap, cap_safe / jnp.maximum(load, _EPS), 1.0)
+    x = x * jnp.min(ratio)
+    violation = jnp.max((jnp.maximum(x @ c - cap, 0.0)) / cap_safe)
+    return WaterfillResult(x=x, lam=lam, violation=violation, iters=iters)

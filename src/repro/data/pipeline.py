@@ -1,0 +1,27 @@
+"""Token batch pipeline: deterministic synthetic streams + sharded iterator."""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def synth_tokens(step: int, batch: int, seq_len: int, vocab: int,
+                 seed: int = 0) -> dict:
+    """Deterministic LM batch for step `step` (labels = next-token shift)."""
+    rng = np.random.default_rng(np.uint64(seed) * 7_919 + np.uint64(step))
+    toks = rng.integers(0, vocab, size=(batch, seq_len + 1), dtype=np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def batch_iterator(batch: int, seq_len: int, vocab: int, seed: int = 0,
+                   sharding: Optional[jax.sharding.Sharding] = None
+                   ) -> Iterator[dict]:
+    step = 0
+    while True:
+        b = synth_tokens(step, batch, seq_len, vocab, seed)
+        if sharding is not None:
+            b = {k: jax.device_put(v, sharding) for k, v in b.items()}
+        yield b
+        step += 1

@@ -1,0 +1,6 @@
+"""Distribution substrate: sharding rules, collectives, pipeline parallelism."""
+from .sharding import (batch_pspecs, cache_pspecs, dp_axes, dp_size,
+                       param_pspecs, state_pspecs, tp_size)
+
+__all__ = ["batch_pspecs", "cache_pspecs", "dp_axes", "dp_size",
+           "param_pspecs", "state_pspecs", "tp_size"]

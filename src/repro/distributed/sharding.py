@@ -1,0 +1,237 @@
+"""Logical sharding rules -> PartitionSpecs for every param / batch / cache.
+
+Mesh contract (launch/mesh.py): single-pod ('data', 'model') = (16, 16);
+multi-pod ('pod', 'data', 'model') = (2, 16, 16).  DP runs over ('pod',
+'data'); TP/EP over 'model'.
+
+Rules are name-based with divisibility fallbacks (GSPMD requires sharded dims
+divisible by the axis size): e.g. recurrentgemma's 10 q-heads cannot shard
+over model=16, so its attention projections stay replicated while its MLP
+(d_ff = 7680) tensor-parallelizes; whisper's vocab 51865 is odd, so its
+embedding shards d_model instead of vocab.  Stacked (scanned) layer params
+get a leading None automatically.  xLSTM cell params are replicated (DP-only
+arch — 125M params; documented in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from ..configs.base import ArchConfig
+
+
+# ------------------------------------------------------------------ helpers
+def tp_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def _div(n: int, tp: int) -> bool:
+    return n % tp == 0
+
+
+# ------------------------------------------------------------- param rules
+def _rule(names, shape, cfg: ArchConfig, tp: int, nd: int = 1):
+    """Trailing-dims spec tuple for one param leaf."""
+    name = names[-1]
+    path = "/".join(names)
+    in_moe = "moe" in names
+    in_cell = "cell" in names
+    in_rg = "rg" in names
+
+    def col(dim=-1, ok=True):
+        s = [None] * 2
+        s[dim] = "model" if ok and _div(shape[dim], tp) else None
+        return tuple(s)
+
+    if in_cell:                      # xLSTM cells: replicated (DP-only arch)
+        return (None,) * len(shape)
+
+    if in_moe and name in ("w_up", "w_gate", "w_down"):
+        # Expert banks are the trillion-scale mass: EP over 'model' (or TP on
+        # the ffn dim when E doesn't divide), PLUS FSDP over 'data' on the
+        # first remaining divisible dim — GSPMD all-gathers the local expert
+        # weights per layer (ZeRO-3 semantics; DeepSeek/Kimi-style EP+FSDP).
+        if _div(cfg.moe.n_experts, tp):
+            # EP over 'model' + FSDP storage over 'data'; moe_apply
+            # re-constrains to compute sharding so GSPMD emits an explicit
+            # bf16 gather (never partial-sum math on the storage dim).
+            spec = ["model", None, None]
+        elif name == "w_down":
+            # small-E experts: TP on the ffn dim over 'model' AND the
+            # contraction dim over 'data' — a second tensor-parallel axis.
+            # Measured BETTER than F-only sharding (EXPERIMENTS §Perf 3b:
+            # compute/16 for modest fp32 partial-sum all-reduces).
+            spec = [None, "model" if _div(shape[-2], tp) else None, None]
+        else:
+            spec = [None, None, "model" if _div(shape[-1], tp) else None]
+        for i in range(3):
+            if spec[i] is None and _div(shape[i], nd) and shape[i] >= nd:
+                spec[i] = "data"
+                break
+        return tuple(spec)
+    if name == "router":
+        return (None, None)
+
+    if in_rg:
+        two = {"w_x": col(), "w_gate_br": col(), "conv_w": col(),
+               "w_a": col(), "w_i": col(),
+               "w_out": (("model" if _div(shape[0], tp) else None), None)}
+        one = {"conv_b", "b_a", "b_i", "lambda"}
+        if name in two:
+            return two[name]
+        if name in one:
+            return ("model" if _div(shape[0], tp) else None,)
+        return (None,) * len(shape)
+
+    if name == "table":              # embedding [V, D]
+        if _div(shape[0], tp):
+            return ("model", None)
+        return (None, "model" if _div(shape[1], tp) else None)
+    if name == "w" and "lm_head" in names:    # [D, V]
+        if _div(shape[1], tp):
+            return (None, "model")
+        return ("model" if _div(shape[0], tp) else None, None)
+
+    # Attention projections shard on the flattened (heads*dh) dim even when
+    # n_heads does not divide tp — GSPMD inserts an all-gather of the sharded
+    # q/k/v before the per-head core (canonical Megatron activation traffic)
+    # and wo stays row-parallel with one [B,S,D] all-reduce per layer.
+    if name == "wq":
+        return col()
+    if name in ("wk", "wv"):
+        return col()
+    if name == "wo":
+        return (("model" if _div(shape[0], tp) else None), None)
+    if name in ("bq", "bk", "bv"):
+        return ("model" if _div(shape[0], tp) else None,)
+
+    if name in ("w_up", "w_gate"):   # dense MLP [D, F]
+        return col()
+    if name == "w_down":             # [F, D]
+        return (("model" if _div(shape[0], tp) else None), None)
+
+    return (None,) * len(shape)      # norms, gates, scalars
+
+
+def param_pspecs(params_tree, cfg: ArchConfig, mesh):
+    """PartitionSpec pytree matching `params_tree` (arrays or ShapeDtypeStructs)."""
+    tp = tp_size(mesh)
+    nd = mesh.shape["data"]
+
+    def fn(path, leaf):
+        names = [k.key for k in path if isinstance(k, DictKey)]
+        if not names:
+            return P()
+        shape = leaf.shape
+        # stacked (scanned) leaves carry a leading n_groups dim
+        base_rank_guess = _base_rank(names, cfg)
+        lead = len(shape) - base_rank_guess
+        base = _rule(names, shape[lead:], cfg, tp, nd)
+        return P(*((None,) * lead + tuple(base)))
+
+    return tree_map_with_path(fn, params_tree)
+
+
+def _base_rank(names, cfg) -> int:
+    name = names[-1]
+    if "moe" in names and name in ("w_up", "w_gate", "w_down"):
+        return 3
+    if "cell" in names and name == "r":
+        return 3
+    if name in ("conv_b", "b_a", "b_i", "lambda", "bq", "bk", "bv", "b_in",
+                "scale", "bias", "b_f", "b_i"):
+        return 1
+    if name in ("gate_x", "gate_m"):
+        return 0
+    return 2
+
+
+# -------------------------------------------------------- batch/cache rules
+def batch_pspecs(batch_tree, mesh):
+    """tokens/labels [B,S] -> (dp, None); memory/frames [B,L,D] -> (dp, ...).
+    Leading batch dim shards over DP only when divisible (long_500k has B=1)."""
+    dp = dp_axes(mesh)
+    n_dp = dp_size(mesh)
+
+    def fn(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        lead = dp if b % n_dp == 0 and b >= n_dp else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return tree_map_with_path(fn, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh, batch_size: int):
+    """KV caches / recurrent states: shard the batch dim over DP.  Stacked
+    (scanned) cache leaves carry a leading n_groups dim, so the batch dim is
+    located by size — the first dim equal to `batch_size` within the leading
+    two positions."""
+    dp = dp_axes(mesh)
+    n_dp = dp_size(mesh)
+
+    def fn(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        spec = [None] * leaf.ndim
+        if batch_size % n_dp == 0 and batch_size >= n_dp:
+            for i in range(min(2, leaf.ndim)):
+                if leaf.shape[i] == batch_size:
+                    spec[i] = dp
+                    break
+        return P(*spec)
+
+    return tree_map_with_path(fn, cache_tree)
+
+
+def _zero1(spec: P, shape, data_size: int) -> P:
+    """ZeRO-1: additionally shard optimizer-state leaves over 'data' on the
+    first still-unsharded divisible dim (the step's param all-gather is the
+    standard ZeRO-1 cost, inserted by GSPMD via out_shardings)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, d) in enumerate(zip(parts, shape)):
+        if p is None and d % data_size == 0 and d >= data_size:
+            parts[i] = "data"
+            break
+    return P(*parts)
+
+
+def state_pspecs(state_tree, cfg: ArchConfig, mesh):
+    """Train state {params, opt, step, rng}: opt stats mirror param specs
+    plus ZeRO-1 sharding over the data axis."""
+    nd = mesh.shape["data"]
+    pspec = param_pspecs(state_tree["params"], cfg, mesh)
+    out = {"params": pspec, "step": P(), "rng": P()}
+
+    def opt_spec(sub):
+        base = param_pspecs(sub, cfg, mesh)
+        return jax.tree.map(
+            lambda spec, leaf: _zero1(spec, leaf.shape, nd), base, sub,
+            is_leaf=lambda x: isinstance(x, P))
+
+    opt = {}
+    for key, sub in state_tree["opt"].items():
+        if key in ("m", "v", "master"):
+            opt[key] = opt_spec(sub)
+        elif key == "stats":
+            opt[key] = tree_map_with_path(
+                lambda p, l: _zero1(P(*([None] * l.ndim)), l.shape, nd), sub)
+        else:
+            opt[key] = jax.tree.map(lambda _: P(), sub)
+    out["opt"] = opt
+    return out

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True) + jnp oracles."""
+from . import ops, ref
+from .ops import (decode_attention_op, dp_clip_accumulate_op,
+                  flash_attention_op, matvec_op, rglru_scan_op, rowmax_op)
+
+__all__ = ["ops", "ref", "decode_attention_op", "dp_clip_accumulate_op",
+           "flash_attention_op", "matvec_op", "rglru_scan_op", "rowmax_op"]

@@ -1,0 +1,97 @@
+"""Scheduler inner-loop kernels — the paper's technique on the MXU/VPU.
+
+At production scale (M ~ 10^3 analysts, K ~ 10^5 live blocks: 1000+ devices
+each minting blocks) the DPBalance dual-ascent iteration is dominated by two
+dense [M,K] sweeps per step plus a dominant-share reduction:
+
+  rowmax(gamma)        mu_i  = max_k gamma_ik          (Defs 5-6)
+  matvec(c, lam)       d_i   = sum_k c_ik lam_k        (Eq 39 denominator)
+  matvec_t(c, x)       load_k = sum_i c_ik x_i          (Eq 14 LHS)
+
+All three tile the K axis through VMEM with accumulators in scratch; the
+waterfill solver calls them every iteration, so the whole scheduler runs
+on-device next to the training step it feeds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _rowmax_kernel(g_ref, o_ref, acc_scr):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.full_like(acc_scr, NEG_INF)
+
+    acc_scr[...] = jnp.maximum(acc_scr[...],
+                               jnp.max(g_ref[...].astype(jnp.float32), axis=1))
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[...] = acc_scr[...]
+
+
+def rowmax(gamma, *, block_m: int = 256, block_k: int = 1024,
+           interpret: bool = False):
+    """mu_i = max_k gamma_ik.  [M,K] -> [M] fp32."""
+    M, K = gamma.shape
+    bm, bk = min(block_m, M), min(block_k, K)
+    assert M % bm == 0 and K % bk == 0
+    return pl.pallas_call(
+        _rowmax_kernel,
+        grid=(M // bm, K // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda m, k: (m, k))],
+        out_specs=pl.BlockSpec((bm,), lambda m, k: (m,)),
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
+        interpret=interpret,
+    )(gamma)
+
+
+def _matvec_kernel(c_ref, v_ref, o_ref, acc_scr):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    c = c_ref[...].astype(jnp.float32)         # [bm, bk]
+    v = v_ref[...].astype(jnp.float32)         # [bk]
+    acc_scr[...] += jnp.sum(c * v[None, :], axis=1)
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[...] = acc_scr[...]
+
+
+def matvec(c, v, *, block_m: int = 256, block_k: int = 1024,
+           interpret: bool = False):
+    """y_i = sum_k c_ik v_k.  [M,K] x [K] -> [M] fp32."""
+    M, K = c.shape
+    bm, bk = min(block_m, M), min(block_k, K)
+    assert M % bm == 0 and K % bk == 0
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(M // bm, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, k: (m, k)),
+            pl.BlockSpec((bk,), lambda m, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda m, k: (m,)),
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
+        interpret=interpret,
+    )(c, v)
+
+
+def matvec_t(c, x, **kw):
+    """load_k = sum_i c_ik x_i — transpose form, reuses `matvec`."""
+    return matvec(c.T, x, **kw)

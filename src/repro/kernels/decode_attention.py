@@ -1,0 +1,87 @@
+"""Flash-decode — one query position against a long KV cache (Pallas TPU).
+
+Grid (B, H, L/bk): KV blocks stream through VMEM innermost-sequentially with
+the online-softmax state in scratch; `cache_len` masks the unwritten tail.
+This is the serve_step hot loop for decode_32k (32k-entry caches) — the
+whole cache is read exactly once per token (memory-bound by design; the
+kernel exists to reach the HBM roofline, not to add FLOPs).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bk: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)          # [dh]
+    k = k_ref[0, 0].astype(jnp.float32)             # [bk, dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+    cache_len = len_ref[0]
+
+    s = jnp.sum(k * q[None, :], axis=1) * scale     # [bk]
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    s = jnp.where(k_pos < cache_len, s, NEG_INF)
+
+    m_prev = m_scr[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[0] = l_scr[0] * corr + jnp.sum(p)
+    acc_scr[...] = acc_scr[...] * corr + jnp.sum(p[:, None] * v, axis=0)[None]
+    m_scr[0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0, 0, 0] = (acc_scr[0] / jnp.maximum(l_scr[0], 1e-20)
+                          ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, cache_len, *, scale=None, block_k: int = 512,
+                     interpret: bool = False):
+    """q [B,H,dh]; k,v [B,KH,L,dh]; cache_len scalar int32 -> [B,H,dh]."""
+    B, H, dh = q.shape
+    KH, L = k.shape[1], k.shape[2]
+    G = H // KH
+    bk = min(block_k, L)
+    assert L % bk == 0, (L, bk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    grid = (B, H, L // bk)
+    kernel = functools.partial(_kernel, scale=scale, bk=bk)
+    q4 = q.reshape(B, H, 1, dh)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, q4, k, v).reshape(B, H, dh)

@@ -1,0 +1,101 @@
+"""Fused GQA flash attention (forward) — Pallas TPU kernel.
+
+Grid (B, H, S/bq, S/bk); the kv-block axis is innermost (sequential on TPU),
+so the online-softmax running state (m, l, acc) lives in VMEM scratch across
+kv iterations and the output block is written once on the last kv step.
+GQA is expressed in the k/v BlockSpec index maps (q head h reads kv head
+h // (H/KH)) — no repeated K/V materialization.  Causal and sliding-window
+masks are positional predicates evaluated on block-local iotas.
+
+VMEM working set per program: bq*dh (q) + 2*bk*dh (k,v) + bq*bk (scores)
++ bq*(dh+2) (state) floats — block sizes are chosen so this fits ~16 MB VMEM
+with dh up to 256 (ops.py picks bq=bk=128 by default, MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window, scale: float, bq: int, bk: int,
+            seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, dh]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    scale=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q [B,H,S,dh]; k,v [B,KH,S,dh] -> [B,H,S,dh]."""
+    B, H, S, dh = q.shape
+    KH = k.shape[1]
+    G = H // KH
+    bq, bk = min(block_q, S), min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    grid = (B, H, S // bq, S // bk)
+    kernel = functools.partial(_kernel, causal=causal, window=window,
+                               scale=scale, bq=bq, bk=bk, seq_len=S)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers: Pallas on TPU, interpret-mode on CPU, always
+validated against ref.py.  `interpret` defaults from the backend so the same
+call sites work everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .budget_alloc import matvec, matvec_t, rowmax
+from .decode_attention import decode_attention
+from .dp_clip_noise import clip_accumulate, dp_clip_accumulate, rownorms
+from .flash_attention import flash_attention
+from .rg_lru import rglru_scan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal=True, window=None, block_q=128,
+                       block_k=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_op(q, k, v, cache_len, *, block_k=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return decode_attention(q, k, v, cache_len, block_k=block_k,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d", "interpret"))
+def rglru_scan_op(a, b, h0=None, *, block_s=256, block_d=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return rglru_scan(a, b, h0, block_s=block_s, block_d=block_d,
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "block_p", "interpret"))
+def dp_clip_accumulate_op(g, clip: float, *, block_p=4096, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return dp_clip_accumulate(g, clip, block_p=block_p, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def rowmax_op(gamma, *, block_m=256, block_k=1024, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return rowmax(gamma, block_m=block_m, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def matvec_op(c, v, *, block_m=256, block_k=1024, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return matvec(c, v, block_m=block_m, block_k=block_k, interpret=interpret)
+
+
+__all__ = ["flash_attention_op", "decode_attention_op", "rglru_scan_op",
+           "dp_clip_accumulate_op", "rowmax_op", "matvec_op", "ref",
+           "flash_attention", "decode_attention", "rglru_scan",
+           "dp_clip_accumulate", "rownorms", "clip_accumulate", "rowmax",
+           "matvec", "matvec_t"]

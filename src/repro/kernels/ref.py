@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the mathematical contract; kernels must match these within
+dtype tolerance across the shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q [B,H,S,dh]; k,v [B,KH,S,dh]; GQA by head grouping.  fp32 softmax."""
+    B, H, S, dh = q.shape
+    KH = k.shape[1]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(B, KH, G, S, dh)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cache_len, *, scale=None):
+    """q [B,H,dh]; k,v [B,KH,L,dh]; attend to first cache_len entries."""
+    B, H, dh = q.shape
+    KH, L = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(B, KH, G, dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(L)[None, :] < cache_len
+    s = jnp.where(mask[:, None, None, :] if mask.ndim == 2 else mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t.  a,b [B,S,D] fp32; h0 [B,D]."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def rownorms_ref(g):
+    """Squared L2 norm per row.  g [B,P] -> [B] fp32."""
+    g = g.astype(jnp.float32)
+    return jnp.sum(g * g, axis=-1)
+
+
+def clip_accumulate_ref(g, scales):
+    """sum_b scales[b] * g[b]  -> [P] fp32.  (DP-SGD clip-and-accumulate.)"""
+    return jnp.einsum("bp,b->p", g.astype(jnp.float32),
+                      scales.astype(jnp.float32))
+
+
+def rowmax_ref(gamma):
+    """mu_i = max_k gamma_ik  (Def 5/6 dominant share).  [M,K] -> [M]."""
+    return jnp.max(gamma.astype(jnp.float32), axis=-1)
+
+
+def matvec_ref(c, lam):
+    """y_i = sum_k c_ik lam_k  (waterfill dual denominator).  [M,K]x[K]->[M]."""
+    return c.astype(jnp.float32) @ lam.astype(jnp.float32)

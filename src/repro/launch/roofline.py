@@ -1,0 +1,171 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), all per-chip seconds on TPU v5e:
+
+  compute    = HLO_matmul_FLOPs / 197 TF/s          (loop-aware analyzer)
+  memory     = HLO_HBM_bytes    / 819 GB/s          (materialized-buffer model)
+  collective = adjusted_coll_bytes / 50 GB/s        (ring-model adjustments:
+               all-reduce 2x payload, others 1x; payloads are per-device
+               result sizes from the partitioned module)
+
+MODEL_FLOPS convention: train 6*N_active*tokens, prefill 2*N_active*tokens,
+decode 2*N_active*batch, divided by chip count; the ratio against HLO FLOPs
+exposes remat/replication waste (ratio < 1 => recompute or replicated math).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_CAP = 16e9          # v5e per-chip HBM
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "results", "roofline.md")
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "results", "roofline.json")
+
+_AR_FACTOR = 2.0  # ring all-reduce moves ~2x payload
+
+
+def param_counts(arch_name: str):
+    """(total, active) parameter counts from eval_shape (no allocation)."""
+    from repro.configs import get_arch
+    from repro.models import init_model
+    cfg = get_arch(arch_name)
+    params = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.bfloat16))
+    total = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        names = [getattr(k, "key", "") for k in path]
+        if "moe" in names and names[-1] in ("w_up", "w_gate", "w_down"):
+            expert += n
+    active = total
+    if cfg.moe is not None:
+        frac = (cfg.moe.top_k) / cfg.moe.n_experts
+        active = total - expert * (1.0 - frac)
+    return float(total), float(active)
+
+
+def model_flops(rec, n_total, n_active, chips: int) -> float:
+    B = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+         "long_500k": 1}[rec["shape"]]
+    S = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+         "long_500k": 1}[rec["shape"]]
+    tokens = B * S
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    return mult * n_active * tokens / chips
+
+
+def coll_seconds(coll: dict) -> float:
+    total = 0.0
+    for op, nbytes in coll.items():
+        factor = _AR_FACTOR if op == "all-reduce" else 1.0
+        total += factor * nbytes
+    return total / LINK_BW
+
+
+def analyze_record(rec, counts_cache) -> dict:
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    if rec["arch"] not in counts_cache:
+        counts_cache[rec["arch"]] = param_counts(rec["arch"])
+    n_total, n_active = counts_cache[rec["arch"]]
+    t_c = rec["flops_per_device"] / PEAK_FLOPS
+    t_m = rec["hbm_bytes_per_device"] / HBM_BW
+    t_x = coll_seconds(rec["collective_bytes"])
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    mf = model_flops(rec, n_total, n_active, chips)
+    fits = rec["bytes_per_device"] <= HBM_CAP
+    step_time = max(t_c, t_m, t_x)
+    mfu = (mf / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind")},
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[1],
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / max(rec["flops_per_device"], 1.0),
+        "roofline_fraction_mfu": mfu,
+        "bytes_per_device": rec["bytes_per_device"],
+        "fits_hbm": fits,
+        "params_total": n_total, "params_active": n_active,
+    }
+
+
+def suggestion(r) -> str:
+    if r["dominant"] == "collective":
+        return ("shrink collective payload: fewer weight gathers (FSDP "
+                "prefetch/overlap), int8 cross-pod AR, or shard differently")
+    if r["dominant"] == "memory":
+        if r["kind"] == "decode":
+            return "memory-bound decode is expected; fuse cache update + attn"
+        return ("cut activation traffic: larger fused blocks, fewer fp32 "
+                "intermediates, remat policy tuning")
+    return "compute-bound: raise MXU utilization (bigger tiles, less remat)"
+
+
+def load_all():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    counts = {}
+    rows = [analyze_record(r, counts) for r in load_all()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful_ratio | MFU@roofline | bytes/dev | fits16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction_mfu']*100:.1f}% "
+            f"| {r['bytes_per_device']/1e9:.1f}G | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    md = "\n".join(lines)
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write(md + "\n")
+    with open(OUT_JSON, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(md)
+    print(f"\n{len(rows)} cells -> {OUT_MD}")
+    # headline: worst cells per category (hillclimb candidates)
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    worst_mfu = min(single, key=lambda r: r["roofline_fraction_mfu"])
+    most_coll = max(single, key=lambda r: r["collective_s"])
+    print(f"worst MFU: {worst_mfu['arch']} x {worst_mfu['shape']} "
+          f"({worst_mfu['roofline_fraction_mfu']*100:.1f}%)")
+    print(f"most collective-bound: {most_coll['arch']} x {most_coll['shape']} "
+          f"({most_coll['collective_s']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

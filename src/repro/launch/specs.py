@@ -1,0 +1,178 @@
+"""ShapeDtypeStruct stand-ins + step builders for every (arch x shape) cell.
+
+`input_specs` returns weak-type-correct, shardable SDS trees with NO device
+allocation; `build_cell` pairs them with the function to lower and the
+in/out shardings.  Both the dry-run and the roofline tooling consume this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_arch, shapes_for
+from ..configs.base import ArchConfig, ShapeSpec
+from ..configs.whisper_medium import DECODER_PROMPT_LEN
+from ..distributed.sharding import (batch_pspecs, cache_pspecs, dp_axes,
+                                    dp_size, param_pspecs, state_pspecs)
+from ..models import decode_step, forward, init_cache, init_model
+from ..training.train_loop import DPConfig, TrainConfig, make_state, train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def arch_for_mesh(cfg: ArchConfig, mesh, shape: ShapeSpec) -> ArchConfig:
+    """Mesh- and shape-specialized config (MoE dispatch groups = DP shards,
+    whisper cross memory = cell seq_len)."""
+    upd: Dict[str, Any] = {}
+    if cfg.moe is not None:
+        g = dp_size(mesh)
+        b_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        while g > 1 and b_tokens % g:
+            g //= 2
+        upd["moe_dispatch_groups"] = max(g, 1)
+    if cfg.encoder is not None:
+        upd["cross_memory_len"] = shape.seq_len
+    if upd:
+        cfg = dataclasses.replace(cfg, **upd)
+    return cfg
+
+
+def train_config_for(cfg: ArchConfig, shape: ShapeSpec) -> TrainConfig:
+    """Per-arch training config: Adafactor without fp32 master for the 1T MoE
+    (pure-bf16 expert bank — the only way 1T fits 256 chips; DESIGN.md §8),
+    AdamW elsewhere."""
+    import os
+    kimi = cfg.name.startswith("kimi")
+    opt = "adafactor" if kimi else "adamw"
+    n_micro = 8 if shape.global_batch % 8 == 0 else 1
+    n_micro = int(os.environ.get("REPRO_NMICRO", n_micro))
+    return TrainConfig(optimizer=opt, dp=DPConfig(n_micro=n_micro),
+                       param_dtype="bfloat16", keep_master=not kimi)
+
+
+def _token_specs(B: int, S: int) -> Dict[str, SDS]:
+    return {"tokens": SDS((B, S), jnp.int32), "labels": SDS((B, S), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """SDS tree for the *batch* (train/prefill) or (token, pos) (decode)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.encoder is not None:
+            b = _token_specs(B, S)
+            b["enc_frames"] = SDS((B, 1500, cfg.d_model), jnp.bfloat16)
+            return b
+        b = _token_specs(B, S)
+        if cfg.cross_memory_len:
+            b["memory"] = SDS((B, cfg.cross_memory_len, cfg.d_model),
+                              jnp.bfloat16)
+        return b
+    if shape.kind == "prefill":
+        if cfg.encoder is not None:
+            return {"tokens": SDS((B, DECODER_PROMPT_LEN), jnp.int32),
+                    "enc_frames": SDS((B, S, cfg.d_model), jnp.bfloat16)}
+        b = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.cross_memory_len:
+            b["memory"] = SDS((B, cfg.cross_memory_len, cfg.d_model),
+                              jnp.bfloat16)
+        return b
+    if shape.kind == "decode":
+        return {"token": SDS((B, 1), jnp.int32),
+                "pos": SDS((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Any:
+    """Decode-cache SDS via eval_shape (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_len = DECODER_PROMPT_LEN if cfg.encoder is not None else S
+
+    def build():
+        params = init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.bfloat16)
+        kw = {}
+        if cfg.encoder is not None:
+            kw["enc_frames"] = jnp.zeros((B, S, cfg.d_model), jnp.bfloat16)
+        elif cfg.cross_memory_len:
+            kw["memory"] = jnp.zeros((B, cfg.cross_memory_len, cfg.d_model),
+                                     jnp.bfloat16)
+        return init_cache(params, cfg, B, cache_len, **kw)
+
+    return jax.eval_shape(build)
+
+
+def state_specs(cfg: ArchConfig, tcfg: TrainConfig) -> Any:
+    return jax.eval_shape(
+        lambda: make_state(jax.random.PRNGKey(0), cfg, tcfg))
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape x mesh) combination."""
+    arch: ArchConfig
+    shape: ShapeSpec
+    fn: Any                 # function to jit
+    args: Tuple             # SDS args
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple = ()
+
+
+def build_cell(arch_name: str, shape: ShapeSpec, mesh) -> Cell:
+    cfg = arch_for_mesh(get_arch(arch_name), mesh, shape)
+
+    if shape.kind == "train":
+        tcfg = train_config_for(cfg, shape)
+        st = state_specs(cfg, tcfg)
+        batch = input_specs(cfg, shape)
+        fn = functools.partial(train_step, cfg=cfg, tcfg=tcfg)
+        in_sh = (state_pspecs(st, cfg, mesh), batch_pspecs(batch, mesh))
+        out_sh = (in_sh[0], P())
+        return Cell(cfg, shape, fn, (st, batch), in_sh, out_sh, donate=(0,))
+
+    params = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.bfloat16))
+    p_specs = param_pspecs(params, cfg, mesh)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+
+        def fn(params, batch):
+            return forward(params, batch["tokens"], cfg,
+                           memory=batch.get("memory"),
+                           enc_frames=batch.get("enc_frames"), remat=False)
+        b_specs = batch_pspecs(batch, mesh)
+        tp = mesh.shape["model"]
+        out_sh = P(dp_axes(mesh) if shape.global_batch % dp_size(mesh) == 0
+                   else None, None, "model" if cfg.vocab % tp == 0 else None)
+        return Cell(cfg, shape, fn, (params, batch), (p_specs, b_specs), out_sh)
+
+    # decode
+    cache = cache_specs(cfg, shape)
+    io = input_specs(cfg, shape)
+    c_specs = cache_pspecs(cache, mesh, shape.global_batch)
+
+    def fn(params, token, cache, pos):
+        return decode_step(params, token, cache, pos, cfg)
+
+    tok_spec = batch_pspecs({"token": io["token"]}, mesh)["token"]
+    in_sh = (p_specs, tok_spec, c_specs, P())
+    out_sh = (P(), c_specs)
+    return Cell(cfg, shape, fn, (params, io["token"], cache, io["pos"]),
+                in_sh, out_sh, donate=(2,))
+
+
+def all_cells(mesh):
+    for name in _assigned():
+        cfg = get_arch(name)
+        for shape in shapes_for(cfg):
+            yield name, shape
+
+
+def _assigned():
+    from ..configs import ASSIGNED
+    return ASSIGNED

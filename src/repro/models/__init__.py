@@ -1,0 +1,6 @@
+"""Model substrate: unified multi-family transformer in pure JAX."""
+from .transformer import forward, init_model, lm_loss, encode
+from .kv_cache import decode_step, forward_with_cache, init_cache
+
+__all__ = ["forward", "init_model", "lm_loss", "encode", "decode_step",
+           "forward_with_cache", "init_cache"]

@@ -1,0 +1,313 @@
+"""KV-cache / recurrent-state management and the decode path.
+
+Cache layout mirrors the model's (prefix, body, suffix) grouping so the
+decode step scans stacked caches alongside stacked params.  Per block kind:
+
+  attn          {"k","v"}: [B, Lc, KH, dh]            Lc = cache_len
+  swa/local     {"k","v"}: [B, min(window, Lc), ...]  ring buffer
+  rec           {"conv": [B, W-1, D], "h": [B, D]}
+  mlstm         {"C": [B,H,dh,dh], "n": [B,H,dh], "m": [B,H]}
+  slstm         {"c","n","h","m": [B,H,dh]}
+  xattn         {"xk","xv"}: [B, Lm, KH, dh]          (projected memory)
+  encdec        self {"k","v"} + cross {"xk","xv"}
+
+The window/ring design is what bounds long_500k decode memory for the
+hybrid/ssm/swa architectures: state is O(window) or O(1), never O(seq).
+RoPE is applied at absolute positions before insertion, so ring entries need
+no window mask — everything resident is in-window by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from . import recurrent as R
+from .transformer import (_ffn_apply, _xattn_apply, apply_block_train, encode,
+                          lm_loss)
+
+Params = Dict[str, Any]
+
+
+def _cache_len_for(kind: str, cfg: ArchConfig, cache_len: int) -> int:
+    if kind in ("swa", "local") and cfg.window:
+        return min(cfg.window, cache_len)
+    return cache_len
+
+
+def _xkv(p_attn, memory, cfg: ArchConfig):
+    B = memory.shape[0]
+    k = (memory @ p_attn["wk"]).reshape(B, -1, cfg.kv_heads, cfg.dh)
+    v = (memory @ p_attn["wv"]).reshape(B, -1, cfg.kv_heads, cfg.dh)
+    if "bk" in p_attn:
+        k = k + p_attn["bk"].reshape(1, 1, cfg.kv_heads, cfg.dh)
+        v = v + p_attn["bv"].reshape(1, 1, cfg.kv_heads, cfg.dh)
+    return k, v
+
+
+def init_cache_slot(p, kind: str, cfg: ArchConfig, batch: int, cache_len: int,
+                    memory=None, dtype=jnp.bfloat16):
+    B, dh, KH, H = batch, cfg.dh, cfg.kv_heads, cfg.n_heads
+    Lc = _cache_len_for(kind, cfg, cache_len)
+    kv = lambda: {"k": jnp.zeros((B, Lc, KH, dh), dtype),
+                  "v": jnp.zeros((B, Lc, KH, dh), dtype)}
+    if kind in ("attn", "swa", "local"):
+        return kv()
+    if kind == "rec":
+        conv, h = R.rglru_init_state(B, cfg.d_model)
+        return {"conv": conv.astype(dtype), "h": h}
+    if kind == "mlstm":
+        C, n, m = R.mlstm_init_state(B, H, cfg.d_model // H)
+        return {"C": C, "n": n, "m": m}
+    if kind == "slstm":
+        c, n, h, m = R.slstm_init_state(B, H, cfg.d_model // H)
+        return {"c": c, "n": n, "h": h, "m": m}
+    if kind == "xattn":
+        xk, xv = _xkv(p["xattn"], memory, cfg)
+        return {"xk": xk, "xv": xv}
+    if kind == "encdec":
+        xk, xv = _xkv(p["xattn"], memory, cfg)
+        return {**kv(), "xk": xk, "xv": xv}
+    raise ValueError(kind)
+
+
+def init_cache(params, cfg: ArchConfig, batch: int, cache_len: int,
+               memory=None, enc_frames=None, dtype=jnp.bfloat16):
+    """Zeroed cache pytree (cross-attn projections precomputed from memory)."""
+    if cfg.encoder is not None:
+        memory = encode(params, enc_frames, cfg)
+    pre = tuple(init_cache_slot(p, k, cfg, batch, cache_len, memory, dtype)
+                for p, (k, _) in zip(params["prefix"], cfg.prefix))
+
+    def body_slot(pos):
+        kind, _ = cfg.pattern[pos]
+        slot1 = init_cache_slot(
+            jax.tree.map(lambda x: x[0], params["body"][pos]),
+            kind, cfg, batch, cache_len, memory, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape), slot1)
+
+    body = tuple(body_slot(p) for p in range(len(cfg.pattern))) \
+        if params["body"] else ()
+    suf = tuple(init_cache_slot(p, cfg.pattern[i][0], cfg, batch, cache_len,
+                                memory, dtype)
+                for i, p in enumerate(params["suffix"]))
+    return {"prefix": pre, "body": body, "suffix": suf}
+
+
+# ------------------------------------------------------------------ decode
+def _attn_decode(h, p, cache, pos, cfg: ArchConfig, ring: bool):
+    B = h.shape[0]
+    q, k, v = L.qkv_project(h, p, cfg.n_heads, cfg.kv_heads, cfg.dh)
+    posv = jnp.full((1,), pos)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    Lc = cache["k"].shape[1]
+    slot = jnp.where(ring, pos % Lc, jnp.minimum(pos, Lc - 1))
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    out = L.decode_attention(q, kc, vc, jnp.minimum(pos + 1, Lc))
+    return out.reshape(B, 1, -1) @ p["wo"], {"k": kc, "v": vc}
+
+
+def apply_block_decode(h, p, cache, kind: str, cfg: ArchConfig, pos):
+    nrm = functools.partial(L.apply_norm, kind=cfg.norm)
+    if kind in ("attn", "swa", "local"):
+        ring = kind in ("swa", "local")
+        out, cache2 = _attn_decode(nrm(h, p["norm1"]), p["attn"], cache, pos,
+                                   cfg, ring)
+        h = h + out
+        return h + _ffn_apply(nrm(h, p["norm2"]), p, cfg), cache2
+    if kind == "rec":
+        out, (conv, hs) = R.rglru_block(nrm(h, p["norm1"]), p["rg"],
+                                        (cache["conv"], cache["h"]))
+        h = h + out
+        h = h + _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+        return h, {"conv": conv.astype(cache["conv"].dtype), "h": hs}
+    if kind == "mlstm":
+        out, (C, n, m) = R.mlstm_decode_step(nrm(h, p["norm1"]), p["cell"],
+                                             cfg.n_heads, (cache["C"], cache["n"], cache["m"]))
+        return h + out, {"C": C, "n": n, "m": m}
+    if kind == "slstm":
+        out, (c, n, hs, m) = R.slstm_scan(nrm(h, p["norm1"]), p["cell"],
+                                          cfg.n_heads,
+                                          (cache["c"], cache["n"], cache["h"], cache["m"]))
+        return h + out, {"c": c, "n": n, "h": hs, "m": m}
+    if kind == "xattn":
+        out = L.decode_attention(
+            (nrm(h, p["normx"]) @ p["xattn"]["wq"]).reshape(
+                h.shape[0], 1, cfg.n_heads, cfg.dh) if "bq" not in p["xattn"]
+            else ((nrm(h, p["normx"]) @ p["xattn"]["wq"]) + p["xattn"]["bq"]).reshape(
+                h.shape[0], 1, cfg.n_heads, cfg.dh),
+            cache["xk"], cache["xv"], cache["xk"].shape[1])
+        out = out.reshape(h.shape[0], 1, -1) @ p["xattn"]["wo"]
+        h = h + (jnp.tanh(p["gate_x"]) * out.astype(jnp.float32)).astype(h.dtype)
+        ff = _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+        h = h + (jnp.tanh(p["gate_m"]) * ff.astype(jnp.float32)).astype(h.dtype)
+        return h, cache
+    if kind == "encdec":
+        out, kv2 = _attn_decode(nrm(h, p["norm1"]), p["attn"],
+                                {"k": cache["k"], "v": cache["v"]}, pos, cfg,
+                                ring=False)
+        h = h + out
+        q = (nrm(h, p["normx"]) @ p["xattn"]["wq"])
+        if "bq" in p["xattn"]:
+            q = q + p["xattn"]["bq"]
+        q = q.reshape(h.shape[0], 1, cfg.n_heads, cfg.dh)
+        out = L.decode_attention(q, cache["xk"], cache["xv"],
+                                 cache["xk"].shape[1])
+        h = h + out.reshape(h.shape[0], 1, -1) @ p["xattn"]["wo"]
+        h = h + _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+        return h, {**kv2, "xk": cache["xk"], "xv": cache["xv"]}
+    raise ValueError(kind)
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig):
+    """One serving step.  token [B,1] int32, pos scalar int32 (current length).
+    Returns (logits [B,1,V] fp32, updated cache)."""
+    h = L.embed(token, params["embed"])
+
+    new_pre = []
+    for p_blk, c_blk, (kind, _) in zip(params["prefix"], cache["prefix"],
+                                       cfg.prefix):
+        h, c2 = apply_block_decode(h, p_blk, c_blk, kind, cfg, pos)
+        new_pre.append(c2)
+
+    new_body = cache["body"]
+    if params["body"]:
+        def group(h, xs):
+            stacks, cstacks = xs
+            new_c = []
+            for p_idx, (kind, _) in enumerate(cfg.pattern):
+                h, c2 = apply_block_decode(h, stacks[p_idx], cstacks[p_idx],
+                                           kind, cfg, pos)
+                new_c.append(c2)
+            return h, tuple(new_c)
+        h, new_body = jax.lax.scan(group, h, (params["body"], cache["body"]))
+
+    new_suf = []
+    for i, (p_blk, c_blk) in enumerate(zip(params["suffix"], cache["suffix"])):
+        kind, _ = cfg.pattern[i]
+        h, c2 = apply_block_decode(h, p_blk, c_blk, kind, cfg, pos)
+        new_suf.append(c2)
+
+    h = L.apply_norm(h, params["final_norm"], kind=cfg.norm)
+    if cfg.tie_embeddings:
+        logits = (h @ params["embed"]["table"].T).astype(jnp.float32)
+    else:
+        logits = L.lm_head(h, params["lm_head"])
+    return logits, {"prefix": tuple(new_pre), "body": new_body,
+                    "suffix": tuple(new_suf)}
+
+
+# ----------------------------------------------------------------- prefill
+def _attn_prefill(h, p, cfg: ArchConfig, *, causal, window, positions, Lc,
+                  ring: bool = False):
+    B, S, _ = h.shape
+    q, k, v = L.qkv_project(h, p, cfg.n_heads, cfg.kv_heads, cfg.dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = L.chunked_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    if S >= Lc:
+        kc, vc = k[:, S - Lc:], v[:, S - Lc:]
+        if ring:  # place absolute position p at slot p % Lc
+            kc = jnp.roll(kc, S % Lc, axis=1)
+            vc = jnp.roll(vc, S % Lc, axis=1)
+    else:
+        pad = ((0, 0), (0, Lc - S), (0, 0), (0, 0))
+        kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, {"k": kc, "v": vc}
+
+
+def block_prefill(h, p, kind: str, cfg: ArchConfig, *, memory, positions, Lc):
+    nrm = functools.partial(L.apply_norm, kind=cfg.norm)
+    if kind in ("attn", "swa", "local"):
+        window = cfg.window if kind in ("swa", "local") else None
+        Lk = _cache_len_for(kind, cfg, Lc)
+        out, cache = _attn_prefill(nrm(h, p["norm1"]), p["attn"], cfg,
+                                   causal=True, window=window,
+                                   positions=positions, Lc=Lk,
+                                   ring=kind in ("swa", "local"))
+        h = h + out
+        return h + _ffn_apply(nrm(h, p["norm2"]), p, cfg), cache
+    if kind == "rec":
+        out, (conv, hs) = R.rglru_block(nrm(h, p["norm1"]), p["rg"])
+        h = h + out
+        h = h + _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+        return h, {"conv": conv, "h": hs}
+    if kind == "mlstm":
+        out, (C, n, m) = R.mlstm_chunkwise(nrm(h, p["norm1"]), p["cell"],
+                                           cfg.n_heads, chunk=cfg.mlstm_chunk)
+        return h + out, {"C": C, "n": n, "m": m}
+    if kind == "slstm":
+        out, (c, n, hs, m) = R.slstm_scan(nrm(h, p["norm1"]), p["cell"],
+                                          cfg.n_heads)
+        return h + out, {"c": c, "n": n, "h": hs, "m": m}
+    if kind == "xattn":
+        x = _xattn_apply(nrm(h, p["normx"]), p["xattn"], memory, cfg)
+        h = h + (jnp.tanh(p["gate_x"]) * x.astype(jnp.float32)).astype(h.dtype)
+        ff = _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+        h = h + (jnp.tanh(p["gate_m"]) * ff.astype(jnp.float32)).astype(h.dtype)
+        xk, xv = _xkv(p["xattn"], memory, cfg)
+        return h, {"xk": xk, "xv": xv}
+    if kind == "encdec":
+        out, kv = _attn_prefill(nrm(h, p["norm1"]), p["attn"], cfg,
+                                causal=True, window=None,
+                                positions=positions, Lc=Lc)
+        h = h + out
+        h = h + _xattn_apply(nrm(h, p["normx"]), p["xattn"], memory, cfg)
+        h = h + _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+        xk, xv = _xkv(p["xattn"], memory, cfg)
+        return h, {**kv, "xk": xk, "xv": xv}
+    raise ValueError(kind)
+
+
+def forward_with_cache(params, tokens, cfg: ArchConfig, cache_len: int, *,
+                       memory=None, enc_frames=None):
+    """Prefill: forward pass that also builds the decode cache.
+    NOTE (tests): for window archs the ring pointer is S % window; keep
+    S <= window in correctness tests so the ring has not wrapped."""
+    if cfg.encoder is not None:
+        memory = encode(params, enc_frames, cfg)
+    h = L.embed(tokens, params["embed"])
+    S = tokens.shape[1]
+    pos = jnp.arange(S)
+
+    new_pre = []
+    for p_blk, (kind, _) in zip(params["prefix"], cfg.prefix):
+        h, c = block_prefill(h, p_blk, kind, cfg, memory=memory, positions=pos,
+                             Lc=cache_len)
+        new_pre.append(c)
+
+    body_cache = ()
+    if params["body"]:
+        def group(h, stacks):
+            cs = []
+            for p_idx, (kind, _) in enumerate(cfg.pattern):
+                h, c = block_prefill(h, stacks[p_idx], kind, cfg,
+                                     memory=memory, positions=pos, Lc=cache_len)
+                cs.append(c)
+            return h, tuple(cs)
+        h, body_cache = jax.lax.scan(group, h, params["body"])
+
+    new_suf = []
+    for i, p_blk in enumerate(params["suffix"]):
+        kind, _ = cfg.pattern[i]
+        h, c = block_prefill(h, p_blk, kind, cfg, memory=memory, positions=pos,
+                             Lc=cache_len)
+        new_suf.append(c)
+
+    h = L.apply_norm(h, params["final_norm"], kind=cfg.norm)
+    if cfg.tie_embeddings:
+        logits = (h @ params["embed"]["table"].T).astype(jnp.float32)
+    else:
+        logits = L.lm_head(h, params["lm_head"])
+    return logits, {"prefix": tuple(new_pre), "body": body_cache,
+                    "suffix": tuple(new_suf)}

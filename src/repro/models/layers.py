@@ -1,0 +1,270 @@
+"""Core transformer layers — pure JAX (init/apply), no flax.
+
+Conventions:
+  * params are plain dict pytrees; init fns take an rng key and a config.
+  * activations default to bf16 with fp32 softmax/norm accumulations.
+  * attention is **chunked online-softmax** (flash-style streaming over KV
+    blocks with lax.scan) so 32k+ prefill never materializes [B,H,S,S].
+    The Pallas kernel in repro.kernels implements the same contract for TPU;
+    this module is the XLA fallback and the dry-run path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(x, params, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x, params, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(x, params, kind: str):
+    return rmsnorm(x, params) if kind == "rmsnorm" else layernorm(x, params)
+
+
+def init_norm_kind(d: int, kind: str, dtype=jnp.float32) -> Params:
+    return init_norm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions [*] -> (cos, sin) [*, head_dim/2] in fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, dh]; positions [..., S] (broadcastable)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    cos, sin = rope_angles(positions, x.shape[-1], theta)   # [..., S, half]
+    cos = cos[..., None, :]                                  # [..., S, 1, half]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------- projections
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_attention(key, d_model: int, n_heads: int, kv_heads: int,
+                   head_dim: int, qkv_bias: bool, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": _dense_init(ks[1], (d_model, kv_heads * head_dim), dtype),
+        "wv": _dense_init(ks[2], (d_model, kv_heads * head_dim), dtype),
+        "wo": _dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((kv_heads * head_dim,), dtype)
+    return p
+
+
+def qkv_project(x, params, n_heads: int, kv_heads: int, head_dim: int):
+    """x [B,S,D] -> q [B,S,H,dh], k/v [B,S,KH,dh]."""
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, S, kv_heads, head_dim),
+            v.reshape(B, S, kv_heads, head_dim))
+
+
+# ----------------------------------------------------- sharding constraints
+def _opt_disabled(name: str) -> bool:
+    """Perf-iteration toggles for A/B roofline measurement (EXPERIMENTS §Perf):
+    REPRO_DISABLE_OPT=cp,pin disables context-parallel attention ('cp') and/or
+    the residual re-pin ('pin')."""
+    import os
+    return name in os.environ.get("REPRO_DISABLE_OPT", "").split(",")
+
+
+def maybe_constrain(x, *axes, opt: str = "cp"):
+    """with_sharding_constraint against the CONTEXT mesh, skipping axes that
+    are absent or do not divide the dim — a no-op on 1-device test runs.
+    Each entry is None, an axis name, or a tuple of axis names."""
+    if _opt_disabled(opt):
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    sizes = dict(mesh.shape)
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        cand = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        cand = tuple(a for a in cand if a in sizes)
+        total = 1
+        for a in cand:
+            total *= sizes[a]
+        spec.append(cand if cand and dim % total == 0 and dim >= total
+                    else None)
+    from jax.sharding import PartitionSpec
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+_DP = ("pod", "data")
+
+
+# ------------------------------------------------- chunked streaming attention
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                      q_offset=0, chunk: int = 1024):
+    """Flash-style online-softmax attention, streaming over KV chunks.
+
+    q [B,Sq,H,dh]; k,v [B,Skv,KH,dh] with H % KH == 0 (GQA).  `q_offset` is the
+    absolute position of q[0] relative to k[0] (for decode/prefill-continue).
+    `window`: sliding-window size (None = unbounded).  Memory per step is
+    O(B * H * Sq * chunk) — never [Sq, Skv].  REPRO_ATTN_CHUNK overrides the
+    block size (a §Perf tuning knob).
+    """
+    import os
+    chunk = int(os.environ.get("REPRO_ATTN_CHUNK", chunk))
+    B, Sq, H, dh = q.shape
+    _, Skv, KH, _ = k.shape
+    G = H // KH
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # Context parallelism over the 'model' axis: q shards on its SEQUENCE
+    # dim while k/v replicate, so the score einsum never produces model-axis
+    # partial sums.  (Without this GSPMD all-reduces the fp32 score tensor —
+    # the dominant collective in the baseline roofline; EXPERIMENTS.md §Perf.)
+    k = maybe_constrain(k, _DP, None, None, None)
+    v = maybe_constrain(v, _DP, None, None, None)
+    # [n, B, chunk, KH, dh]
+    kc = k.reshape(B, n_chunks, chunk, KH, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KH, dh).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, Sq, KH, G, dh).astype(jnp.float32)
+    qg = maybe_constrain(qg, _DP, "model", None, None, None)
+    scale = 1.0 / math.sqrt(dh)
+    q_pos = q_offset + jnp.arange(Sq)                       # [Sq]
+
+    def step(carry, inputs):
+        m, l, acc = carry                                    # [B,Sq,KH,G], ..., [B,Sq,KH,G,dh]
+        kb, vb, cidx = inputs
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        kv_pos = cidx * chunk + jnp.arange(chunk)            # [chunk]
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb) * scale  # [B,Sq,KH,G,chunk]
+        mask = kv_pos[None, :] < Skv                         # padding
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KH, G), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KH, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KH, G, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None):
+    """Single-position attention against a cache.  q [B,1,H,dh];
+    k_cache/v_cache [B,L,KH,dh]; cache_len — number of valid entries."""
+    B, _, H, dh = q.shape
+    _, L, KH, _ = k_cache.shape
+    G = H // KH
+    qg = q.reshape(B, KH, G, dh).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kf) / math.sqrt(dh)   # [B,KH,G,L]
+    pos = jnp.arange(L)
+    mask = pos[None, :] < cache_len
+    if window is not None:
+        mask = mask & (pos[None, :] > cache_len - 1 - window)
+    s = jnp.where(mask[:, None, None, :] if mask.ndim == 2 else mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- mlp
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(ks[0], (d_model, d_ff), dtype),
+         "w_down": _dense_init(ks[1], (d_ff, d_model), dtype)}
+    if act in ("silu", "swiglu"):
+        p["w_gate"] = _dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(x, params, act: str):
+    if act in ("silu", "swiglu"):
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------- embeddings
+def init_embed(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(tokens, params):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype=jnp.bfloat16) -> Params:
+    return {"w": _dense_init(key, (d_model, vocab), dtype)}
+
+
+def lm_head(x, params):
+    return (x @ params["w"]).astype(jnp.float32)

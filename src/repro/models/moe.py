@@ -1,0 +1,150 @@
+"""Mixture-of-Experts block — gather-based dispatch, expert-parallel ready.
+
+TPU adaptation (DESIGN.md §4): instead of the GPU MegaBlocks sparse kernels or
+the classic Mesh-TF one-hot dispatch einsum (whose [tokens, E, capacity]
+tensor explodes at trillion scale), we sort token assignments by expert and
+gather fixed-capacity per-expert batches, giving large dense [E_local, C, D]
+matmuls the MXU likes:
+
+  1. router -> top-k (gates, expert ids) per token
+  2. argsort assignments by expert id; per-expert offsets via cumsum
+  3. per local expert: dynamic-slice its token index block (static capacity C)
+  4. batched expert matmuls  [E_l, C, D] @ [E_l, D, F] -> activation -> down
+  5. scatter-add back with gate weights (segment-sum over token ids)
+
+Expert parallelism: wrap `moe_apply` in shard_map with experts split over the
+'model' mesh axis; each shard computes only its experts' contributions and a
+single psum over 'model' combines (one all-reduce of [T, D] per layer — far
+cheaper than all-gathering expert weights).  With no mesh the same code runs
+single-device (E_local = E), which is what smoke tests exercise.
+
+Tokens that overflow an expert's capacity are dropped (standard Switch-style
+drop, capacity_factor controls headroom) — dropped tokens pass through the
+residual stream untouched.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, act: str,
+             dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _dense_init(ks[0], (d_model, n_experts), jnp.float32),
+        "w_up": _dense_init(ks[1], (n_experts, d_model, d_ff), dtype),
+        "w_down": _dense_init(ks[2], (n_experts, d_ff, d_model), dtype),
+    }
+    if act in ("silu", "swiglu"):
+        p["w_gate"] = _dense_init(ks[3], (n_experts, d_model, d_ff), dtype)
+    return p
+
+
+def moe_capacity(n_tokens: int, top_k: int, n_experts: int,
+                 capacity_factor: float) -> int:
+    c = int(math.ceil(capacity_factor * n_tokens * top_k / n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_apply(x, params, *, top_k: int, capacity: int, act: str,
+              n_groups: int = 1):
+    """x [T, D] -> [T, D].
+
+    `n_groups` splits tokens into independent dispatch groups (set to the
+    data-parallel shard count in distributed runs): routing, sort, gather and
+    scatter happen *per group*, so the [E, C, D] dispatch buffers stay
+    O(local tokens) and GSPMD shards the group dim over 'data' with no
+    cross-shard token traffic.  `capacity` is per group.
+    """
+    if n_groups > 1:
+        T, D = x.shape
+        assert T % n_groups == 0, (T, n_groups)
+        xg = x.reshape(n_groups, T // n_groups, D)
+        out = jax.vmap(lambda xs: _moe_local(
+            xs, params, top_k=top_k, capacity=capacity, act=act))(xg)
+        return out.reshape(T, D)
+    return _moe_local(x, params, top_k=top_k, capacity=capacity, act=act)
+
+
+def _expert_compute_sharding(w, down: bool = False):
+    """Constrain an expert bank to its COMPUTE sharding (EP over 'model' when
+    E divides, else TP on the ffn dim) regardless of its FSDP *storage*
+    sharding — GSPMD then inserts an explicit bf16 all-gather (ZeRO-3
+    semantics).  Without this, storage sharding on a contraction dim makes
+    GSPMD emit partial-sum einsums + fp32 activation all-reduces over 'data'
+    (the dominant collective in the kimi/mixtral baselines; §Perf iter 3)."""
+    from .layers import maybe_constrain
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return w
+    tp = dict(mesh.shape)["model"]
+    if w.shape[0] % tp == 0:
+        return maybe_constrain(w, "model", None, None, opt="fsdp")
+    # non-EP (F-sharded) experts carry no FSDP storage dim — leave GSPMD
+    # alone (constraining here measurably regressed mixtral; §Perf iter 3b).
+    return w
+
+
+def _moe_local(x, params, *, top_k: int, capacity: int, act: str):
+    T, D = x.shape
+    E_global = params["router"].shape[1]
+    E_local = params["w_up"].shape[0]
+    expert_offset = 0
+
+    logits = (x.astype(jnp.float32) @ params["router"])        # [T, E] fp32
+    topv, topi = jax.lax.top_k(logits, top_k)                  # [T, k]
+    gates = jax.nn.softmax(topv, axis=-1).astype(x.dtype)
+
+    flat_expert = topi.reshape(-1)                             # [T*k]
+    sort_idx = jnp.argsort(flat_expert)                        # stable
+    sorted_expert = flat_expert[sort_idx]
+    group_sizes = jnp.bincount(sorted_expert, length=E_global) # [E]
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+
+    # pad so dynamic_slice never clamps into a neighboring group
+    sentinel = T * top_k
+    sort_idx_pad = jnp.concatenate(
+        [sort_idx, jnp.full((capacity,), sentinel, sort_idx.dtype)])
+
+    local_eids = expert_offset + jnp.arange(E_local)
+    blk = jax.vmap(lambda e: jax.lax.dynamic_slice(
+        sort_idx_pad, (offsets[e],), (capacity,)))(local_eids)  # [E_l, C]
+    valid = (jnp.arange(capacity)[None, :] <
+             group_sizes[local_eids][:, None]) & (blk < sentinel)
+    tok = jnp.where(valid, blk // top_k, 0)                     # token row ids
+
+    xb = jnp.take(x, tok, axis=0) * valid[..., None].astype(x.dtype)
+    w_up = _expert_compute_sharding(params["w_up"])
+    w_down = _expert_compute_sharding(params["w_down"], down=True)
+    if "w_gate" in params:
+        w_gate = _expert_compute_sharding(params["w_gate"])
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, w_gate))
+        h = h * jnp.einsum("ecd,edf->ecf", xb, w_up)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xb, w_up))
+    yb = jnp.einsum("ecf,efd->ecd", h, w_down)                  # [E_l, C, D]
+
+    gate_flat = gates.reshape(-1)                               # [T*k]
+    w = jnp.where(valid, jnp.take(gate_flat, jnp.where(valid, blk, 0)), 0.0)
+    yb = yb * w[..., None].astype(yb.dtype)
+
+    out = jax.ops.segment_sum(
+        yb.reshape(-1, D), tok.reshape(-1), num_segments=T)
+    return out.astype(x.dtype)
+
+
+def aux_load_balance_loss(logits, topi, n_experts: int):
+    """Switch-style auxiliary load-balancing loss (mean fraction * mean prob)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # [T, E]
+    frac = jnp.mean(jax.nn.one_hot(topi[..., 0], n_experts), axis=0)
+    prob = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac * prob)

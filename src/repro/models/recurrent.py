@@ -1,0 +1,283 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+TPU adaptation (DESIGN.md §4): the CUDA reference implementations are
+sequential scans; here
+
+* RG-LRU uses `jax.lax.associative_scan` (log-depth, large dense tiles) for
+  train/prefill and an O(1) state update for decode;
+* mLSTM uses the **chunkwise-parallel** formulation (flash-linear-attention
+  style): quadratic within a chunk, recurrent [dh, dh] state across chunks,
+  fully stabilized in fp32 with running max;
+* sLSTM keeps a genuine per-step `lax.scan` (its hidden-to-gate recurrence is
+  not associative — this block is the paper-acknowledged sequential one).
+
+All states are explicit pytrees so serve_step can carry them as a "KV cache"
+equivalent with O(1) memory per token — this is what makes the long_500k
+shape runnable for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+Params = Dict[str, Any]
+
+_C_RGLRU = 8.0
+
+
+# ------------------------------------------------------------------- RG-LRU
+def init_rglru_block(key, d_model: int, d_rnn: int, conv_width: int = 4,
+                     dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(L)^c is in (0.9, 0.999) — griffin style.
+    u = jax.random.uniform(ks[0], (d_rnn,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / _C_RGLRU) / (1 - u ** (1.0 / _C_RGLRU)))
+    return {
+        "w_x": _dense_init(ks[1], (d_model, d_rnn), dtype),
+        "w_gate_br": _dense_init(ks[2], (d_model, d_rnn), dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, d_rnn)) * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "w_a": _dense_init(ks[4], (d_rnn, d_rnn), dtype),
+        "b_a": jnp.zeros((d_rnn,), jnp.float32),
+        "w_i": _dense_init(ks[5], (d_rnn, d_rnn), dtype),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": _dense_init(ks[6], (d_rnn, d_model), dtype),
+    }
+
+
+def _rglru_coeffs(x, params):
+    """x [B,S,Dr] -> decay a, input b (fp32)."""
+    r = jax.nn.sigmoid((x @ params["w_a"]).astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid((x @ params["w_i"]).astype(jnp.float32) + params["b_i"])
+    log_a = -_C_RGLRU * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    return a, b
+
+
+def linear_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (time).
+    a, b [B,S,D] fp32; h0 [B,D] initial state folded into b_0."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv.  x [B,S,D], w [W,D].  state [B,W-1,D] for decode.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # [B, S+W-1, D]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):]
+    return y, new_state
+
+
+def rglru_block(x, params, state=None):
+    """Griffin recurrent core.  x [B,S,D] -> (out [B,S,D], new_state).
+    state = (conv_buf [B,W-1,Dr], h [B,Dr]) for decode; None for train."""
+    gate = jax.nn.gelu(x @ params["w_gate_br"])
+    xr = x @ params["w_x"]
+    conv_state = None if state is None else state[0]
+    xr, new_conv = causal_conv1d(xr, params["conv_w"], params["conv_b"], conv_state)
+    a, bcoef = _rglru_coeffs(xr, params)
+    h0 = None if state is None else state[1]
+    h = linear_scan(a, bcoef, h0)                         # [B,S,Dr] fp32
+    new_h = h[:, -1]
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return out, (new_conv, new_h)
+
+
+def rglru_init_state(batch: int, d_rnn: int, conv_width: int = 4):
+    return (jnp.zeros((batch, conv_width - 1, d_rnn), jnp.bfloat16),
+            jnp.zeros((batch, d_rnn), jnp.float32))
+
+
+# -------------------------------------------------------------------- mLSTM
+def init_mlstm_block(key, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Params:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": _dense_init(ks[0], (d_model, n_heads * dh), dtype),
+        "wk": _dense_init(ks[1], (d_model, n_heads * dh), dtype),
+        "wv": _dense_init(ks[2], (d_model, n_heads * dh), dtype),
+        "w_i": _dense_init(ks[3], (d_model, n_heads), jnp.float32),
+        "b_i": jnp.zeros((n_heads,), jnp.float32),
+        "w_f": _dense_init(ks[4], (d_model, n_heads), jnp.float32),
+        "b_f": jnp.ones((n_heads,), jnp.float32) * 3.0,   # open forget gates
+        "w_o": _dense_init(ks[5], (d_model, n_heads * dh), dtype),
+        "w_out": _dense_init(ks[6], (n_heads * dh, d_model), dtype),
+    }
+
+
+def mlstm_init_state(batch: int, n_heads: int, dh: int):
+    return (jnp.zeros((batch, n_heads, dh, dh), jnp.float32),   # C~
+            jnp.zeros((batch, n_heads, dh), jnp.float32),       # n~
+            jnp.full((batch, n_heads), -1e30, jnp.float32))     # m
+
+
+def _mlstm_qkvif(x, params, n_heads):
+    B, S, D = x.shape
+    dh = params["wq"].shape[1] // n_heads
+    q = (x @ params["wq"]).reshape(B, S, n_heads, dh)
+    k = (x @ params["wk"]).reshape(B, S, n_heads, dh) / math.sqrt(dh)
+    v = (x @ params["wv"]).reshape(B, S, n_heads, dh)
+    i = (x.astype(jnp.float32) @ params["w_i"]) + params["b_i"]   # [B,S,H]
+    f = (x.astype(jnp.float32) @ params["w_f"]) + params["b_f"]
+    o = jax.nn.sigmoid(x @ params["w_o"]).reshape(B, S, n_heads, dh)
+    return q, k, v, i, f, o
+
+
+def mlstm_chunkwise(x, params, n_heads: int, chunk: int = 256, state=None):
+    """Chunkwise-parallel mLSTM.  x [B,S,D] -> (h [B,S,D], final state)."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    q, k, v, i, f, o = _mlstm_qkvif(x, params, n_heads)
+    if pad:
+        # padded steps: i = -inf (no input), logf -> 0 (f -> +inf pre-sigmoid)
+        # so the state passes through untouched; outputs there are sliced off.
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v, o = map(zpad, (q, k, v, o))
+        i = jnp.pad(i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        f = jnp.pad(f, ((0, 0), (0, pad), (0, 0)), constant_values=1e3)
+    S_pad = S + pad
+    dh = q.shape[-1]
+    n_ch = S_pad // chunk
+
+    def rs(t):  # [B,S_pad,...] -> [n_ch, B, chunk, ...]
+        return t.reshape(B, n_ch, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qc, kc, vc, ic, fc, oc = map(rs, (q, k, v, i, f, o))
+    if state is None:
+        state = mlstm_init_state(B, n_heads, dh)
+
+    def step(carry, inp):
+        C, n, m = carry                       # C~ [B,H,dh,dh], n~ [B,H,dh], m [B,H]
+        qb, kb, vb, ib, fb, ob = inp          # [B,L,H,*]
+        L = qb.shape[1]
+        logf = jax.nn.log_sigmoid(fb)                         # [B,L,H]
+        fcum = jnp.cumsum(logf, axis=1)                       # F_t
+        ftot = fcum[:, -1]                                    # [B,H]
+        # intra-chunk logits A[t,s] = F_t - F_s + i_s  (s <= t)
+        A = fcum[:, :, None, :] - fcum[:, None, :, :] + ib[:, None, :, :]
+        tril = jnp.tril(jnp.ones((L, L), bool))
+        A = jnp.where(tril[None, :, :, None], A, -jnp.inf)    # [B,t,s,H]
+        rowmax = jnp.max(A, axis=2)                           # [B,L,H]
+        inter_log = fcum + m[:, None, :]                      # [B,L,H]
+        m_t = jnp.maximum(rowmax, inter_log)                  # [B,L,H]
+        # numerator
+        qf = qb.astype(jnp.float32)
+        kf, vf = kb.astype(jnp.float32), vb.astype(jnp.float32)
+        intra_w = jnp.exp(A - m_t[:, :, None, :])             # [B,t,s,H]
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * intra_w
+        num = jnp.einsum("btsh,bshd->bthd", scores, vf)
+        num = num + jnp.exp(inter_log - m_t)[..., None] * \
+            jnp.einsum("bthd,bhde->bthe", qf, C)
+        den = jnp.einsum("btsh,bshd->bthd", intra_w, kf)
+        den = den + jnp.exp(inter_log - m_t)[..., None] * n[:, None, :, :]
+        qn = jnp.abs(jnp.einsum("bthd,bthd->bth", qf, den))
+        denom = jnp.maximum(qn, jnp.exp(-m_t))
+        h = num / denom[..., None]
+        h = (ob.astype(jnp.float32) * h)
+        # state update to end of chunk
+        m_next = jnp.maximum(m + ftot, jnp.max(
+            ftot[:, None, :] - fcum + ib, axis=1))
+        w_old = jnp.exp(m + ftot - m_next)                    # [B,H]
+        w_in = jnp.exp(ftot[:, None, :] - fcum + ib - m_next[:, None, :])
+        C_next = w_old[..., None, None] * C + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w_in, kf, vf)
+        n_next = w_old[..., None] * n + jnp.einsum("bsh,bshd->bhd", w_in, kf)
+        return (C_next, n_next, m_next), h
+
+    (C, n, m), hs = jax.lax.scan(step, state, (qc, kc, vc, ic, fc, oc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S_pad, n_heads * dh)[:, :S]
+    out = h.astype(x.dtype) @ params["w_out"]
+    return out, (C, n, m)
+
+
+def mlstm_decode_step(x, params, n_heads: int, state):
+    """x [B,1,D] one-token update — O(dh^2) per head."""
+    B = x.shape[0]
+    q, k, v, i, f, o = _mlstm_qkvif(x, params, n_heads)
+    dh = q.shape[-1]
+    C, n, m = state
+    logf = jax.nn.log_sigmoid(f[:, 0])                        # [B,H]
+    m_new = jnp.maximum(logf + m, i[:, 0])
+    a = jnp.exp(logf + m - m_new)
+    b = jnp.exp(i[:, 0] - m_new)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    C = a[..., None, None] * C + b[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n = a[..., None] * n + b[..., None] * kf
+    qf = q[:, 0].astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    h = num / jnp.maximum(qn, jnp.exp(-m_new))[..., None]
+    h = o[:, 0].astype(jnp.float32) * h
+    out = h.reshape(B, 1, n_heads * dh).astype(x.dtype) @ params["w_out"]
+    return out, (C, n, m_new)
+
+
+# -------------------------------------------------------------------- sLSTM
+def init_slstm_block(key, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Params:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # fused input projection for 4 gates (i, f, z, o)
+        "w_in": _dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        "b_in": jnp.zeros((4 * d_model,), jnp.float32),
+        # block-diagonal recurrent weights, per head [H, dh, 4*dh]
+        "r": (_dense_init(ks[1], (n_heads, dh, 4 * dh), jnp.float32) * 0.3),
+        "w_out": _dense_init(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def slstm_init_state(batch: int, n_heads: int, dh: int):
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return (z, z, z, jnp.zeros((batch, n_heads, dh), jnp.float32))  # c, n, h, m
+
+
+def slstm_scan(x, params, n_heads: int, state=None):
+    """Per-step scan (non-associative recurrence).  x [B,S,D]."""
+    B, S, D = x.shape
+    dh = D // n_heads
+    pre_all = (x @ params["w_in"]).astype(jnp.float32) + params["b_in"]  # [B,S,4D]
+    pre_all = pre_all.reshape(B, S, 4, n_heads, dh)
+    if state is None:
+        state = slstm_init_state(B, n_heads, dh)
+
+    def step(carry, pre):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, params["r"]).reshape(B, n_heads, 4, dh)
+        it = pre[:, 0] + rec[:, :, 0]
+        ft = pre[:, 1] + rec[:, :, 1]
+        zt = jnp.tanh(pre[:, 2] + rec[:, :, 2])
+        ot = jax.nn.sigmoid(pre[:, 3] + rec[:, :, 3])
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+        fp = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+        ip = jnp.exp(it - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    pre_scan = pre_all.transpose(1, 0, 2, 3, 4)            # [S,B,4,H,dh]
+    (c, n, h, m), hs = jax.lax.scan(step, state, pre_scan)
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    return out @ params["w_out"], (c, n, h, m)

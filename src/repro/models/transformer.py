@@ -1,0 +1,262 @@
+"""Unified multi-family transformer backbone.
+
+One model covers all ten assigned architectures via `ArchConfig.pattern`
+(DESIGN.md §5): dense/GQA attention, sliding-window/local attention,
+RG-LRU hybrid, xLSTM (mLSTM/sLSTM), MoE FFNs, cross-attention (VLM), and
+encoder-decoder (whisper).  Layers are grouped by the repeating pattern and
+executed with `lax.scan` over stacked parameters (+ optional remat), which
+keeps the lowered HLO small for 40-64-layer models and is what makes the
+512-device dry-run compile quickly.
+
+Param/caches are plain pytrees; entry points:
+
+  init_model(key, cfg, dtype)                      -> params
+  forward(params, tokens, cfg, ...)                -> logits [B,S,V]
+  forward_with_cache(...)                          -> (logits, cache)  # prefill
+  init_cache(params, cfg, batch, cache_len, ...)   -> zeroed cache
+  decode_step(params, token, cache, pos, cfg, ...) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from . import moe as M
+from . import recurrent as R
+
+Params = Dict[str, Any]
+
+
+# ====================================================================== init
+def _init_ffn(key, cfg: ArchConfig, use_moe: bool, dtype) -> Params:
+    act = "silu" if cfg.act in ("silu", "geglu") else "gelu"
+    if use_moe:
+        assert cfg.moe is not None
+        p = {"moe": M.init_moe(key, cfg.d_model, cfg.d_ff, cfg.moe.n_experts,
+                               cfg.act, dtype)}
+        if cfg.moe.n_shared:
+            p["shared"] = L.init_mlp(jax.random.fold_in(key, 7), cfg.d_model,
+                                     cfg.d_ff * cfg.moe.n_shared, cfg.act, dtype)
+        return p
+    width = cfg.dense_ff or cfg.d_ff
+    return {"mlp": L.init_mlp(key, cfg.d_model, width, cfg.act, dtype)}
+
+
+def init_block(key, kind: str, use_moe: bool, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    nk = cfg.norm
+    D = cfg.d_model
+    if kind in ("attn", "swa", "local"):
+        p = {"norm1": L.init_norm_kind(D, nk),
+             "attn": L.init_attention(ks[0], D, cfg.n_heads, cfg.kv_heads,
+                                      cfg.dh, cfg.qkv_bias, dtype),
+             "norm2": L.init_norm_kind(D, nk)}
+        p.update(_init_ffn(ks[1], cfg, use_moe, dtype))
+        return p
+    if kind == "rec":
+        return {"norm1": L.init_norm_kind(D, nk),
+                "rg": R.init_rglru_block(ks[0], D, D, dtype=dtype),
+                "norm2": L.init_norm_kind(D, nk),
+                **_init_ffn(ks[1], cfg, use_moe, dtype)}
+    if kind == "mlstm":
+        return {"norm1": L.init_norm_kind(D, nk),
+                "cell": R.init_mlstm_block(ks[0], D, cfg.n_heads, dtype)}
+    if kind == "slstm":
+        return {"norm1": L.init_norm_kind(D, nk),
+                "cell": R.init_slstm_block(ks[0], D, cfg.n_heads, dtype)}
+    if kind == "xattn":
+        p = {"normx": L.init_norm_kind(D, nk),
+             "xattn": L.init_attention(ks[0], D, cfg.n_heads, cfg.kv_heads,
+                                       cfg.dh, cfg.qkv_bias, dtype),
+             "gate_x": jnp.zeros((), jnp.float32),
+             "gate_m": jnp.zeros((), jnp.float32),
+             "norm2": L.init_norm_kind(D, nk)}
+        p.update(_init_ffn(ks[1], cfg, use_moe, dtype))
+        return p
+    if kind == "encdec":
+        p = {"norm1": L.init_norm_kind(D, nk),
+             "attn": L.init_attention(ks[0], D, cfg.n_heads, cfg.kv_heads,
+                                      cfg.dh, cfg.qkv_bias, dtype),
+             "normx": L.init_norm_kind(D, nk),
+             "xattn": L.init_attention(ks[1], D, cfg.n_heads, cfg.kv_heads,
+                                       cfg.dh, cfg.qkv_bias, dtype),
+             "norm2": L.init_norm_kind(D, nk)}
+        p.update(_init_ffn(ks[2], cfg, use_moe, dtype))
+        return p
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_model(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    specs = cfg.layer_specs()
+    P = len(cfg.pattern)
+    n_pre, n_g, n_suf = len(cfg.prefix), cfg.n_groups, cfg.n_suffix
+
+    def stack_init(pos: int):
+        kind, use_moe = cfg.pattern[pos]
+        def one(i):
+            return init_block(jax.random.fold_in(ks[0], pos * 1000 + i),
+                              kind, use_moe, cfg, dtype)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[one(i) for i in range(n_g)]) \
+            if n_g else None
+
+    params: Params = {
+        "embed": L.init_embed(ks[1], cfg.vocab, cfg.d_model, dtype),
+        "prefix": tuple(init_block(jax.random.fold_in(ks[2], i), k, m, cfg, dtype)
+                        for i, (k, m) in enumerate(cfg.prefix)),
+        "body": tuple(stack_init(p) for p in range(P)) if n_g else (),
+        "suffix": tuple(init_block(jax.random.fold_in(ks[3], i), *cfg.pattern[i], cfg, dtype)
+                        for i in range(n_suf)),
+        "final_norm": L.init_norm_kind(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_lm_head(ks[4], cfg.d_model, cfg.vocab, dtype)
+    if cfg.encoder is not None:
+        ne = cfg.encoder.n_layers
+        def enc_one(i):
+            return init_block(jax.random.fold_in(ks[5], i), "attn", False, cfg, dtype)
+        params["encoder"] = {
+            "body": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[enc_one(i) for i in range(ne)]),
+            "final_norm": L.init_norm_kind(cfg.d_model, cfg.norm),
+        }
+    return params
+
+
+# ================================================================= train fwd
+def _ffn_apply(h, p, cfg: ArchConfig):
+    if "moe" in p:
+        B, S, D = h.shape
+        spec = cfg.moe
+        G = cfg.moe_dispatch_groups
+        cap = M.moe_capacity(B * S // G, spec.top_k, spec.n_experts,
+                             spec.capacity_factor)
+        out = M.moe_apply(h.reshape(B * S, D), p["moe"], top_k=spec.top_k,
+                          capacity=cap, act=cfg.act, n_groups=G).reshape(B, S, D)
+        if "shared" in p:
+            out = out + L.mlp(h, p["shared"], cfg.act)
+        return out
+    return L.mlp(h, p["mlp"], cfg.act)
+
+
+def _attn_apply_train(h, p, cfg: ArchConfig, *, causal: bool, window, positions):
+    q, k, v = L.qkv_project(h, p, cfg.n_heads, cfg.kv_heads, cfg.dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = L.chunked_attention(q, k, v, causal=causal, window=window)
+    B, S = h.shape[:2]
+    out = out.reshape(B, S, -1) @ p["wo"]
+    # Pin the residual back to batch-only sharding: sequence sharding must
+    # not leak into the FFN, where GSPMD would gather fp32 weight banks per
+    # layer instead of resharding the (smaller) activations (§Perf iter 2).
+    return L.maybe_constrain(out, L._DP, None, None, opt="pin")
+
+
+def _xattn_apply(h, p_attn, memory, cfg: ArchConfig):
+    """Cross-attention: q from h, k/v from memory (no rope on memory)."""
+    B, S, _ = h.shape
+    q = (h @ p_attn["wq"])
+    if "bq" in p_attn:
+        q = q + p_attn["bq"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.dh)
+    k = (memory @ p_attn["wk"]).reshape(B, -1, cfg.kv_heads, cfg.dh)
+    v = (memory @ p_attn["wv"]).reshape(B, -1, cfg.kv_heads, cfg.dh)
+    if "bk" in p_attn:
+        k = k + p_attn["bk"].reshape(1, 1, cfg.kv_heads, cfg.dh)
+        v = v + p_attn["bv"].reshape(1, 1, cfg.kv_heads, cfg.dh)
+    out = L.chunked_attention(q, k, v, causal=False, window=None)
+    return out.reshape(B, S, -1) @ p_attn["wo"]
+
+
+def apply_block_train(h, p, kind: str, cfg: ArchConfig, *, memory=None,
+                      positions=None, causal=True):
+    nrm = functools.partial(L.apply_norm, kind=cfg.norm)
+    if kind in ("attn", "swa", "local"):
+        window = cfg.window if kind in ("swa", "local") else None
+        h = h + _attn_apply_train(nrm(h, p["norm1"]), p["attn"], cfg,
+                                  causal=causal, window=window,
+                                  positions=positions)
+        return h + _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+    if kind == "rec":
+        out, _ = R.rglru_block(nrm(h, p["norm1"]), p["rg"])
+        h = h + out
+        return h + _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+    if kind == "mlstm":
+        out, _ = R.mlstm_chunkwise(nrm(h, p["norm1"]), p["cell"], cfg.n_heads,
+                                   chunk=cfg.mlstm_chunk)
+        return h + out
+    if kind == "slstm":
+        out, _ = R.slstm_scan(nrm(h, p["norm1"]), p["cell"], cfg.n_heads)
+        return h + out
+    if kind == "xattn":
+        x = _xattn_apply(nrm(h, p["normx"]), p["xattn"], memory, cfg)
+        h = h + (jnp.tanh(p["gate_x"]) * x.astype(jnp.float32)).astype(h.dtype)
+        ff = _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+        return h + (jnp.tanh(p["gate_m"]) * ff.astype(jnp.float32)).astype(h.dtype)
+    if kind == "encdec":
+        h = h + _attn_apply_train(nrm(h, p["norm1"]), p["attn"], cfg,
+                                  causal=causal, window=None,
+                                  positions=positions)
+        h = h + _xattn_apply(nrm(h, p["normx"]), p["xattn"], memory, cfg)
+        return h + _ffn_apply(nrm(h, p["norm2"]), p, cfg)
+    raise ValueError(kind)
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """Whisper encoder over stub frame embeddings [B, Le, D]."""
+    h = frames
+    pos = jnp.arange(frames.shape[1])
+
+    def step(h, p):
+        h = apply_block_train(h, p, "attn", cfg, positions=pos, causal=False)
+        return h, None
+
+    h, _ = jax.lax.scan(jax.remat(step), h, params["encoder"]["body"])
+    return L.apply_norm(h, params["encoder"]["final_norm"], kind=cfg.norm)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, memory=None, enc_frames=None,
+            remat: bool = True):
+    """Training/prefill forward -> logits [B, S, vocab] (fp32)."""
+    if cfg.encoder is not None:
+        memory = encode(params, enc_frames, cfg)
+    h = L.embed(tokens, params["embed"])
+    S = tokens.shape[1]
+    pos = jnp.arange(S)
+
+    for p_blk, (kind, _) in zip(params["prefix"], cfg.prefix):
+        h = apply_block_train(h, p_blk, kind, cfg, memory=memory, positions=pos)
+
+    if params["body"]:
+        def group(h, stacks):
+            for p_idx, (kind, _) in enumerate(cfg.pattern):
+                h = apply_block_train(h, stacks[p_idx], kind, cfg,
+                                      memory=memory, positions=pos)
+            return h, None
+        step = jax.remat(group) if remat else group
+        h, _ = jax.lax.scan(step, h, params["body"])
+
+    for i, p_blk in enumerate(params["suffix"]):
+        kind, _ = cfg.pattern[i]
+        h = apply_block_train(h, p_blk, kind, cfg, memory=memory, positions=pos)
+
+    h = L.apply_norm(h, params["final_norm"], kind=cfg.norm)
+    if cfg.tie_embeddings:
+        return (h @ params["embed"]["table"].T).astype(jnp.float32)
+    return L.lm_head(h, params["lm_head"])
+
+
+def lm_loss(logits, labels, mask=None):
+    """Mean token cross-entropy; logits fp32 [B,S,V], labels [B,S]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

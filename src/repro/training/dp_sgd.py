@@ -1,0 +1,91 @@
+"""DP-SGD gradient machinery: clip + noise, two granularities.
+
+* ``example`` mode — true per-example clipping via vmap'd grads, for the
+  ~100M FL payload models (paper scale).  The flatten/clip/accumulate hot
+  loop is the Pallas `dp_clip_noise` kernel's contract; this module calls the
+  jnp fallback (kernels/ops.py picks the kernel on TPU).
+* ``microbatch`` mode — FL client/cohort-level clipping: lax.scan over
+  microbatches, each microbatch = one client cohort slice; its mean gradient
+  is clipped as a unit (DP-FedAvg semantics) and accumulated.  This is the
+  scalable path used by the big train_step (memory: 2x grads, not B x).
+
+Noise is added once after aggregation: std = sigma * clip / n_units.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, clip: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale), tree), n
+
+
+def add_noise(tree, key, std: float):
+    leaves, tdef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [l + std * jax.random.normal(k, l.shape, jnp.float32)
+             for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(tdef, noisy)
+
+
+def dp_gradients(
+    loss_fn: Callable[[Any, Dict], jax.Array],
+    params,
+    batch: Dict,
+    key,
+    *,
+    clip: float = 1.0,
+    noise_multiplier: float = 0.0,
+    mode: str = "microbatch",
+    n_micro: int = 8,
+) -> Tuple[Any, Dict]:
+    """Returns (noised mean clipped grads fp32, metrics).
+
+    batch leaves have leading dim B; it is split into n_micro slices
+    (microbatch mode) or B per-example units (example mode).
+    """
+    B = jax.tree.leaves(batch)[0].shape[0]
+
+    if mode == "example":
+        def one(ex):
+            ex = jax.tree.map(lambda x: x[None], ex)
+            l, g = jax.value_and_grad(loss_fn)(params, ex)
+            g, n = clip_by_global_norm(g, clip)
+            return g, (n, l)
+        grads, (norms, losses) = jax.vmap(one)(batch)
+        gsum = jax.tree.map(lambda g: jnp.sum(g, axis=0), grads)
+        n_units = B
+    else:
+        assert B % n_micro == 0, (B, n_micro)
+        mb = jax.tree.map(lambda x: x.reshape(n_micro, B // n_micro, *x.shape[1:]),
+                          batch)
+
+        def body(acc, mslice):
+            l, g = jax.value_and_grad(loss_fn)(params, mslice)
+            g, n = clip_by_global_norm(g, clip)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return acc, (n, l)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gsum, (norms, losses) = jax.lax.scan(body, zeros, mb)
+        n_units = n_micro
+
+    gmean = jax.tree.map(lambda g: g / n_units, gsum)
+    if noise_multiplier > 0.0:
+        gmean = add_noise(gmean, key, noise_multiplier * clip / n_units)
+    metrics = {"grad_norm_mean": jnp.mean(norms),
+               "grad_norm_max": jnp.max(norms),
+               "clip_frac": jnp.mean((norms > clip).astype(jnp.float32)),
+               "loss_mean": jnp.mean(losses)}
+    return gmean, metrics

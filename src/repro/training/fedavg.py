@@ -1,0 +1,138 @@
+"""DP-FedAvg orchestration: the FL rounds the DPBalance scheduler feeds.
+
+A *pipeline* granted privacy budget by the scheduler runs FL rounds here:
+  1. cohort selection with OVER-SELECTION (straggler mitigation: select
+     ceil(over_select * cohort) clients, close the round at the reporting
+     deadline, drop stragglers — DP-FedAvg tolerates partial cohorts);
+  2. each client trains locally (SGD epochs) on its granted data blocks;
+  3. client deltas are clipped (client-level DP), optionally int8-compressed
+     with error feedback, averaged, and Gaussian noise calibrated from the
+     pipeline's RDP grant is added;
+  4. the accountant records the round; the ledger was already debited by the
+     scheduler grant — training can never exceed it.
+
+Elasticity: the cohort is drawn from the *currently live* device set each
+round, so node loss shrinks cohorts instead of stalling training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..privacy.accountant import RdpAccountant
+from .compression import compress_tree, decompress_tree
+from .dp_sgd import clip_by_global_norm, add_noise
+
+
+@dataclasses.dataclass
+class FedAvgConfig:
+    cohort_size: int = 8
+    over_select: float = 1.25       # straggler head-room
+    deadline_frac: float = 0.8      # fraction of selected that must report
+    local_epochs: int = 1
+    local_lr: float = 0.05
+    local_batch: int = 8
+    clip: float = 1.0
+    compress: bool = False
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ClientResult:
+    delta: Dict
+    n_examples: int
+    latency: float
+
+
+@functools.lru_cache(maxsize=16)
+def _local_sgd_step(loss_fn, lr: float):
+    @jax.jit
+    def step(p, b):
+        g = jax.grad(loss_fn)(p, b)
+        return jax.tree.map(
+            lambda w, gg: (w.astype(jnp.float32) - lr * gg.astype(jnp.float32)
+                           ).astype(w.dtype), p, g)
+    return step
+
+
+def client_update(params, loss_fn, batches, lr: float, epochs: int):
+    """Local SGD; returns the model delta (client -> server).  The jitted
+    step is cached per (loss_fn, lr) so repeated clients never recompile."""
+    p = params
+    step = _local_sgd_step(loss_fn, lr)
+    for _ in range(epochs):
+        for b in batches:
+            p = step(p, b)
+    return jax.tree.map(lambda new, old: new.astype(jnp.float32)
+                        - old.astype(jnp.float32), p, params)
+
+
+def aggregate(deltas: Sequence[Dict], clip: float, noise_std: float, key,
+              compress: bool = False, residuals: Optional[List] = None):
+    """Clip each client delta, (optionally) int8-compress, average, noise."""
+    clipped = []
+    new_residuals = []
+    for i, d in enumerate(deltas):
+        d, _ = clip_by_global_norm(d, clip)
+        if compress:
+            res = residuals[i] if residuals else None
+            (q, s), res2 = compress_tree(d, res)
+            d = decompress_tree(q, s)
+            new_residuals.append(res2)
+        clipped.append(d)
+    n = float(len(clipped))
+    mean = jax.tree.map(lambda *xs: sum(xs) / n, *clipped)
+    if noise_std > 0:
+        mean = add_noise(mean, key, noise_std / n)
+    return mean, (new_residuals if compress else None)
+
+
+def fl_round(
+    params,
+    loss_fn,
+    client_data: Dict[int, Callable[[], List[Dict]]],
+    live_devices: Sequence[int],
+    cfg: FedAvgConfig,
+    accountant: Optional[RdpAccountant] = None,
+    sigma: float = 0.0,
+    round_idx: int = 0,
+    latency_fn: Optional[Callable[[int], float]] = None,
+):
+    """One DP-FedAvg round over the live device set.  Returns
+    (new_params, metrics)."""
+    rng = np.random.default_rng(cfg.seed + round_idx)
+    n_sel = min(int(np.ceil(cfg.cohort_size * cfg.over_select)),
+                len(live_devices))
+    selected = rng.choice(np.asarray(live_devices), size=n_sel, replace=False)
+
+    results: List[ClientResult] = []
+    for dev in selected:
+        batches = client_data[int(dev)]()
+        delta = client_update(params, loss_fn, batches, cfg.local_lr,
+                              cfg.local_epochs)
+        lat = latency_fn(int(dev)) if latency_fn else rng.exponential(1.0)
+        results.append(ClientResult(delta, sum(
+            b["tokens"].shape[0] for b in batches), lat))
+
+    # deadline: keep the fastest deadline_frac * n_sel reporters
+    results.sort(key=lambda r: r.latency)
+    keep = max(1, int(np.ceil(cfg.deadline_frac * len(results))))
+    kept, dropped = results[:keep], results[keep:]
+
+    key = jax.random.PRNGKey(cfg.seed * 7919 + round_idx)
+    mean_delta, _ = aggregate([r.delta for r in kept], cfg.clip,
+                              sigma * cfg.clip, key, compress=cfg.compress)
+    new_params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+        params, mean_delta)
+    if accountant is not None and sigma > 0:
+        accountant.record_step(sigma)
+    return new_params, {
+        "cohort": len(kept), "stragglers_dropped": len(dropped),
+        "selected": n_sel,
+    }

@@ -1,0 +1,137 @@
+"""Optimizers in pure JAX (no optax): AdamW and Adafactor.
+
+Mixed precision: if params are low-precision (bf16), the optimizer keeps an
+fp32 master copy and re-casts after each update.  Adafactor's factored second
+moment is the memory-viable choice for the 1T-param MoE (DESIGN.md §8):
+AdamW costs 12 bytes/param of optimizer state + 4 master; Adafactor ~4 master
++ O(rows+cols).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _cast_like(src, ref):
+    return jax.tree.map(lambda s, r: s.astype(r.dtype), src, ref)
+
+
+def _master(params):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          keep_master: bool = True) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        st = {"m": z, "v": jax.tree.map(jnp.copy, z),
+              "count": jnp.zeros((), jnp.int32)}
+        if keep_master:
+            st["master"] = _master(params)
+        return st
+
+    def update(grads, st, params):
+        c = st["count"] + 1
+        b1c = 1.0 - b1 ** c.astype(jnp.float32)
+        b2c = 1.0 - b2 ** c.astype(jnp.float32)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, st["m"], g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, st["v"], g32)
+        base = st.get("master", _master(params))
+        new_master = jax.tree.map(
+            lambda p, m_, v_: p - lr * (m_ / b1c / (jnp.sqrt(v_ / b2c) + eps)
+                                        + weight_decay * p),
+            base, m, v)
+        new_params = _cast_like(new_master, params)
+        new_st = {"m": m, "v": v, "count": c}
+        if keep_master:
+            new_st["master"] = new_master
+        return new_params, new_st
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, keep_master: bool = True) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern) — rank-1 stats for matrices."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def stat(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        st = {"stats": jax.tree.map(stat, params,
+                                    is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+              "count": jnp.zeros((), jnp.int32)}
+        if keep_master:
+            st["master"] = _master(params)
+        return st
+
+    def update(grads, st, params):
+        c = st["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                prec = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(prec, eps))
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                news = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return u, news
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(st["stats"])
+        ups, news = zip(*[upd(g, s, p) for g, s, p in
+                          zip(flat_g, flat_s, flat_p)])
+        base = st.get("master", _master(params))
+        flat_b = tdef.flatten_up_to(base)
+        new_master = [b - lr * u for b, u in zip(flat_b, ups)]
+        new_params = jax.tree.unflatten(tdef, [
+            nm.astype(p.dtype) for nm, p in zip(new_master, flat_p)])
+        new_st = {"stats": jax.tree.unflatten(tdef, list(news)), "count": c}
+        if keep_master:
+            new_st["master"] = jax.tree.unflatten(tdef, new_master)
+        return new_params, new_st
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, st, params):
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new_params, {"count": st["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[name](**kw)

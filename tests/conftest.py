@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override belongs to
+# the dry-run ONLY — launch/dryrun.py sets it before jax import).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", max_examples=20, deadline=None, derandomize=True,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("ci")

@@ -1,0 +1,75 @@
+"""Loop-aware HLO analyzer: verified against analytically-known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.hlo_analysis import analyze
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_plain_matmul():
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    r = analyze(_compile(lambda a, b: a @ b, x, w))
+    assert r["flops"] == pytest.approx(2 * 128 * 256 * 64, rel=1e-6)
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    r = analyze(_compile(f, x, w))
+    assert r["flops"] == pytest.approx(10 * 2 * 128 ** 3, rel=0.05)
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(h, _):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), None
+            h2, _ = jax.lax.scan(inner, h, None, length=10)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, None, length=4)
+        return h
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    r = analyze(_compile(f, x, w))
+    assert r["flops"] == pytest.approx(40 * 2 * 128 ** 3, rel=0.05)
+
+
+def test_scan_accumulator_bytes_not_inflated():
+    """A scan writing one row per step must NOT be billed the full output
+    buffer every iteration (dynamic-update-slice in-place semantics)."""
+    def f(x):
+        def body(c, _):
+            c = c + 1.0
+            return c, c
+        _, ys = jax.lax.scan(body, x, None, length=1000)
+        return ys
+    x = jax.ShapeDtypeStruct((128,), jnp.float32)
+    r = analyze(_compile(f, x))
+    # true traffic ~ 2 * 1000 * 128 * 4B = 1MB; full-buffer billing would be
+    # ~1000 * 512KB = 512MB
+    assert r["bytes_hbm"] < 20e6, r["bytes_hbm"]
+
+
+def test_grad_flops_scale():
+    """Backward of a matmul chain costs ~2x forward (+remat recompute)."""
+    def fwd(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(jax.remat(body), x, None, length=8)
+        return jnp.sum(h)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    f_fwd = analyze(_compile(fwd, x, w))["flops"]
+    f_grad = analyze(_compile(jax.grad(fwd, argnums=1), x, w))["flops"]
+    assert 2.5 <= f_grad / f_fwd <= 4.5, f_grad / f_fwd

@@ -1,0 +1,96 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,KH,S,dh", [
+    (1, 2, 1, 64, 32), (2, 4, 2, 128, 64), (1, 8, 8, 64, 16),
+    (2, 6, 2, 96, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 32)])
+def test_flash_attention(B, H, KH, S, dh, dtype, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), dtype)
+    k = jax.random.normal(ks[1], (B, KH, S, dh), dtype)
+    v = jax.random.normal(ks[2], (B, KH, S, dh), dtype)
+    out = ops.flash_attention_op(q, k, v, causal=causal, window=window,
+                                 block_q=32, block_k=32)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,H,KH,L,dh", [
+    (1, 2, 1, 128, 32), (2, 4, 2, 256, 64), (2, 8, 8, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("frac", [0.25, 1.0])
+def test_decode_attention(B, H, KH, L, dh, dtype, frac):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, KH, L, dh), dtype)
+    v = jax.random.normal(ks[2], (B, KH, L, dh), dtype)
+    clen = max(1, int(L * frac))
+    out = ops.decode_attention_op(q, k, v, jnp.asarray(clen), block_k=32)
+    expect = ref.decode_attention_ref(q, k, v, clen)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,D,bs,bd", [
+    (1, 32, 16, 8, 16), (2, 64, 32, 16, 16), (2, 128, 64, 32, 32),
+])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_rglru_scan(B, S, D, bs, bd, with_h0):
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (B, S, D), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (B, S, D), jnp.float32)
+    h0 = jax.random.normal(ks[2], (B, D), jnp.float32) if with_h0 else None
+    out = ops.rglru_scan_op(a, b, h0, block_s=bs, block_d=bd)
+    expect = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,P,bp", [(4, 256, 64), (8, 1024, 256),
+                                    (16, 512, 512)])
+@pytest.mark.parametrize("clip", [0.5, 3.0])
+def test_dp_clip_accumulate(B, P, bp, clip):
+    g = jax.random.normal(KEY, (B, P), jnp.float32) * 2.0
+    out, norms = ops.dp_clip_accumulate_op(g, clip, block_p=bp)
+    true_norms = jnp.sqrt(ref.rownorms_ref(g))
+    scales = jnp.minimum(1.0, clip / true_norms)
+    expect = ref.clip_accumulate_ref(g, scales)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(true_norms),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+    # clipped rows really are clipped
+    clipped_norm = float(jnp.linalg.norm(g[0] * scales[0]))
+    assert clipped_norm <= clip * (1 + 1e-5)
+
+
+@pytest.mark.parametrize("M,K,bm,bk", [(64, 256, 32, 64), (256, 1024, 256, 256)])
+def test_budget_kernels(M, K, bm, bk):
+    ks = jax.random.split(KEY, 2)
+    gamma = jax.random.uniform(ks[0], (M, K), jnp.float32)
+    lam = jax.random.uniform(ks[1], (K,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.rowmax_op(gamma, block_m=bm, block_k=bk)),
+        np.asarray(ref.rowmax_ref(gamma)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.matvec_op(gamma, lam, block_m=bm, block_k=bk)),
+        np.asarray(ref.matvec_ref(gamma, lam)), rtol=1e-4)

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode consistency.
+
+Every assigned arch: one forward + loss (finite, right shapes) and one train
+step; prefill+decode must match the full forward at fp32 roundoff.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, reduced, shapes_for
+from repro.models import (decode_step, forward, forward_with_cache,
+                          init_model, lm_loss)
+from repro.training import DPConfig, TrainConfig, make_state, train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _inputs(r, B, S, key):
+    kwargs = {}
+    if r.encoder is not None:
+        kwargs["enc_frames"] = jax.random.normal(
+            key, (B, r.cross_memory_len, r.d_model), jnp.float32) * 0.1
+    elif r.cross_memory_len:
+        kwargs["memory"] = jax.random.normal(
+            key, (B, r.cross_memory_len, r.d_model), jnp.float32) * 0.1
+    return kwargs
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_and_loss(name):
+    r = reduced(get_arch(name))
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, r, dtype=jnp.float32)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, r.vocab)
+    logits = forward(params, toks, r, **_inputs(r, B, S, key))
+    assert logits.shape == (B, S, r.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = lm_loss(logits, toks)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_decode_matches_forward(name):
+    r = reduced(get_arch(name))
+    key = jax.random.PRNGKey(1)
+    params = init_model(key, r, dtype=jnp.float32)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, r.vocab)
+    kwargs = _inputs(r, B, S, key)
+    full = forward(params, toks, r, **kwargs)
+    _, cache = forward_with_cache(params, toks[:, :S - 1], r, cache_len=S,
+                                  **kwargs)
+    lg, _ = decode_step(params, toks[:, S - 1:S], cache, jnp.asarray(S - 1), r)
+    err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, S - 1])))
+    scale = float(jnp.max(jnp.abs(full[:, S - 1]))) + 1e-9
+    assert err / scale < 1e-4, (name, err)
+
+
+@pytest.mark.parametrize("name", ["flaas-100m", "mixtral-8x22b",
+                                  "recurrentgemma-2b", "xlstm-125m",
+                                  "whisper-medium", "kimi-k2-1t-a32b"])
+def test_train_step_runs(name):
+    r = reduced(get_arch(name))
+    tcfg = TrainConfig(optimizer="adamw", lr=1e-3, param_dtype="float32",
+                       dp=DPConfig(clip=1.0, noise_multiplier=0.0, n_micro=2))
+    key = jax.random.PRNGKey(2)
+    state = make_state(key, r, tcfg)
+    step = jax.jit(functools.partial(train_step, cfg=r, tcfg=tcfg))
+    B, S = 4, 16
+    toks = np.random.default_rng(0).integers(0, r.vocab, (B, S + 1))
+    batch = {"tokens": jnp.asarray(toks[:, :-1]),
+             "labels": jnp.asarray(toks[:, 1:])}
+    if r.encoder is not None:
+        batch["enc_frames"] = jnp.zeros((B, r.cross_memory_len, r.d_model),
+                                        jnp.float32)
+    elif r.cross_memory_len:
+        batch["memory"] = jnp.zeros((B, r.cross_memory_len, r.d_model),
+                                    jnp.float32)
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(state["step"]) == 1
+    leaves = jax.tree.leaves(state["params"])
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+
+
+def test_shape_table():
+    """Every assigned arch exposes the required shape cells; long_500k only
+    for sub-quadratic families (DESIGN.md §5)."""
+    names = {n: [s.name for s in shapes_for(get_arch(n))] for n in ALL_ARCHS
+             if n != "flaas-100m"}
+    for n, shapes in names.items():
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes), n
+    assert "long_500k" in names["recurrentgemma-2b"]
+    assert "long_500k" in names["xlstm-125m"]
+    assert "long_500k" in names["mixtral-8x22b"]
+    assert "long_500k" not in names["qwen2.5-32b"]
+    assert "long_500k" not in names["whisper-medium"]
+    total = sum(len(v) for v in names.values())
+    assert total == 33  # 10 archs x 4 shapes - 7 long_500k skips
+
+
+def test_exact_configs_match_assignment():
+    a = get_arch("qwen2.5-32b")
+    assert (a.n_layers, a.d_model, a.n_heads, a.kv_heads, a.d_ff, a.vocab) \
+        == (64, 5120, 40, 8, 27648, 152064)
+    k = get_arch("kimi-k2-1t-a32b")
+    assert (k.n_layers, k.d_model, k.moe.n_experts, k.moe.top_k) \
+        == (61, 7168, 384, 8)
+    m = get_arch("mixtral-8x22b")
+    assert (m.moe.n_experts, m.moe.top_k, m.window) == (8, 2, 4096)
+    rg = get_arch("recurrentgemma-2b")
+    assert rg.pattern == (("rec", False), ("rec", False), ("local", False))

@@ -1,0 +1,81 @@
+"""Privacy substrate: RDP math, composition, ledger lifecycle, accountant."""
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.privacy import (BlockLedger, RdpAccountant, gaussian_rdp,
+                           rdp_to_dp, sigma_for_rdp_budget)
+
+
+class TestRdp:
+    def test_gaussian_rdp_value(self):
+        assert float(gaussian_rdp(2.0, 8.0)) == pytest.approx(1.0)
+
+    @given(st.floats(0.5, 50.0), st.integers(1, 100), st.floats(0.01, 2.0))
+    def test_sigma_budget_roundtrip(self, alpha, steps, eps):
+        sigma = float(sigma_for_rdp_budget(eps, alpha, steps))
+        spent = steps * float(gaussian_rdp(sigma, alpha))
+        assert spent == pytest.approx(eps, rel=1e-4)
+
+    @given(st.floats(1.1, 64.0), st.floats(0.01, 5.0))
+    def test_rdp_to_dp_monotone_in_delta(self, alpha, eps):
+        e1 = float(rdp_to_dp(eps, alpha, 1e-5))
+        e2 = float(rdp_to_dp(eps, alpha, 1e-7))
+        assert e2 >= e1
+
+    def test_sequential_composition_additive(self):
+        acc = RdpAccountant(alpha_star=8.0)
+        for _ in range(5):
+            acc.record_step(sigma=4.0)
+        assert acc.spent_at_alpha_star == pytest.approx(
+            5 * float(gaussian_rdp(4.0, 8.0)), rel=1e-6)
+
+    def test_subsampling_amplifies(self):
+        acc = RdpAccountant(alpha_star=8.0)
+        full = acc.step_cost(sigma=4.0)
+        sub = acc.step_cost(sigma=4.0, q=0.01)
+        assert sub < full
+
+
+class TestLedger:
+    def test_lifecycle_and_parallel_composition(self):
+        led = BlockLedger()
+        b0 = led.create_block(0, 1.0, 0.0)
+        b1 = led.create_block(0, 1.5, 0.0)
+        led.consume(b0, 0.4)
+        led.consume(b1, 0.9)
+        # device loss = max over blocks (parallel composition)
+        assert led.device_loss(0) == pytest.approx(0.9)
+        assert not led.block(b0).retired
+        led.consume(b0, 0.6)
+        assert led.block(b0).retired
+        assert b0 not in led.live_blocks()
+
+    def test_overdraw_rejected(self):
+        led = BlockLedger()
+        b = led.create_block(1, 0.5, 0.0)
+        with pytest.raises(ValueError):
+            led.consume(b, 0.6)
+
+    def test_vector_debit(self):
+        led = BlockLedger()
+        ids = [led.create_block(0, 1.0, 0.0) for _ in range(4)]
+        led.debit_grants(np.asarray(ids), np.asarray([0.1, 0.2, 0.0, 0.5]))
+        np.testing.assert_allclose(led.capacity_vector(ids),
+                                   [0.9, 0.8, 1.0, 0.5], atol=1e-6)
+
+    def test_grant_matches_accountant(self):
+        """A pipeline granted eps and trained for R rounds at the derived
+        sigma spends exactly its grant (the scheduler/trainer contract)."""
+        led = BlockLedger()
+        b = led.create_block(0, 1.2, 0.0)
+        grant, rounds = 0.3, 12
+        acc = RdpAccountant(alpha_star=8.0)
+        sigma = acc.sigma_for_grant(grant, rounds)
+        led.consume(b, grant)            # scheduler debits up front
+        for _ in range(rounds):
+            acc.record_step(sigma)
+        assert acc.spent_at_alpha_star <= grant * (1 + 1e-6)
+        eps_dp, _ = acc.certify(delta=1e-5)
+        assert np.isfinite(eps_dp) and eps_dp > 0

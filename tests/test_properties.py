@@ -1,0 +1,139 @@
+"""Property-based tests of the paper's four economic properties (Thms 1-4)
+and the fairness-efficiency tradeoff (Thm 5), via hypothesis.
+
+The theorems hold for the continuous SP1 program at beta > 1,
+lambda = (beta-1)/beta; instances are drawn in the paper's regime (every
+analyst demands every block with positive weight) and checked with solver
+tolerances.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import alpha_fair_waterfill, dominant_fairness, jain_index
+from repro.core.utility import normalized_fairness
+
+TOL = 3e-2
+
+
+def _instance(draw, m_max=5, k_max=4):
+    M = draw(st.integers(2, m_max))
+    K = draw(st.integers(1, k_max))
+    vals = draw(st.lists(st.floats(0.05, 0.95), min_size=M * K,
+                         max_size=M * K))
+    c = np.asarray(vals, np.float32).reshape(M, K)
+    mu = c.max(1)
+    return M, K, c, mu
+
+
+inst = st.builds(lambda d: d, st.data())
+
+
+@given(st.data())
+def test_sharing_incentive(data):
+    """Thm 2(a): beta>1, lambda=(beta-1)/beta -> U_i(x) >= U_i(even split)."""
+    M, K, c, mu = _instance(data.draw)
+    r = alpha_fair_waterfill(jnp.asarray(mu), jnp.ones(M), jnp.asarray(c),
+                             jnp.ones(M, bool), beta=2.2)
+    x = np.asarray(r.x)
+    # even split: analyst i gets 1/M of every block
+    x_even = np.min((1.0 / M) / np.maximum(c, 1e-9), axis=1)
+    assert (mu * x >= mu * x_even * (1 - TOL) - 1e-4).all()
+
+
+@given(st.data())
+def test_envy_freeness(data):
+    """Thm 3(a): no analyst gains by taking another's granted bundle."""
+    M, K, c, mu = _instance(data.draw)
+    r = alpha_fair_waterfill(jnp.asarray(mu), jnp.ones(M), jnp.asarray(c),
+                             jnp.ones(M, bool), beta=2.2)
+    x = np.asarray(r.x)
+    bundles = c * x[:, None]                      # [M, K] granted epsilon
+    for i in range(M):
+        for j in range(M):
+            if i == j:
+                continue
+            x_ij = np.min(bundles[j] / np.maximum(c[i], 1e-9))
+            assert mu[i] * x_ij <= mu[i] * x[i] * (1 + TOL) + 1e-4, (i, j)
+
+
+@given(st.data())
+def test_pareto_efficiency(data):
+    """Thm 1: at the optimum no analyst can grow without another shrinking:
+    every analyst is pinned by at least one tight constraint."""
+    M, K, c, mu = _instance(data.draw)
+    r = alpha_fair_waterfill(jnp.asarray(mu), jnp.ones(M), jnp.asarray(c),
+                             jnp.ones(M, bool), beta=2.2, tol=1e-7)
+    x = np.asarray(r.x)
+    load = x @ c                                   # [K]
+    xcap = np.min(1.0 / np.maximum(c, 1e-9), axis=1)
+    for i in range(M):
+        tight_constraint = any(
+            c[i, k] > 1e-6 and load[k] >= 1 - 5e-2 for k in range(K))
+        at_cap = x[i] >= xcap[i] * (1 - 5e-2)
+        assert tight_constraint or at_cap, i
+
+
+@given(st.data())
+def test_weak_strategy_proofness(data):
+    """Thm 4(a): inflating the dominant-block demand cannot increase BOTH the
+    weighted dominant share and the non-dominant share."""
+    M, K, c, mu = _instance(data.draw)
+    if K < 2:
+        return
+    r = alpha_fair_waterfill(jnp.asarray(mu), jnp.ones(M), jnp.asarray(c),
+                             jnp.ones(M, bool), beta=2.2, tol=1e-7)
+    x = np.asarray(r.x)
+    liar = 0
+    kdom = int(np.argmax(c[liar]))
+    c2 = c.copy()
+    c2[liar, kdom] = min(c2[liar, kdom] * 1.5, 0.99)   # lie: mu' > mu
+    mu2 = c2.max(1)
+    r2 = alpha_fair_waterfill(jnp.asarray(mu2), jnp.ones(M), jnp.asarray(c2),
+                              jnp.ones(M, bool), beta=2.2, tol=1e-7)
+    x2 = np.asarray(r2.x)
+    # realized shares under the TRUE demand coefficients
+    dom_gain = mu[liar] * x2[liar] - mu[liar] * x[liar]
+    nondom = np.delete(c[liar] * x[liar], kdom)
+    nondom2 = np.delete(c[liar] * x2[liar], kdom)
+    if nondom.size and dom_gain > TOL:
+        assert (nondom2 <= nondom * (1 + TOL) + 1e-4).all()
+
+
+@given(st.data())
+@settings(max_examples=10)
+def test_tradeoff_thm5(data):
+    """Thm 5: SP1 efficiency is non-increasing and fairness non-decreasing
+    as beta grows."""
+    M, K, c, mu = _instance(data.draw, m_max=4, k_max=3)
+    effs, fairs = [], []
+    for beta in (1.3, 2.2, 4.0):
+        r = alpha_fair_waterfill(jnp.asarray(mu), jnp.ones(M),
+                                 jnp.asarray(c), jnp.ones(M, bool), beta=beta)
+        util = jnp.asarray(mu) * r.x
+        effs.append(float(jnp.sum(util)))
+        fairs.append(float(jain_index(util)))
+    for a, b in zip(effs, effs[1:]):
+        assert b <= a * (1 + TOL) + 1e-4
+    for a, b in zip(fairs, fairs[1:]):
+        assert b >= a * (1 - TOL) - 1e-4
+
+
+@given(st.lists(st.floats(0.01, 1.0), min_size=2, max_size=8))
+def test_fairness_metric_is_maximal_at_equal_shares(utils):
+    """Eq 9 sanity: equal utilities maximize f_beta; normalized form in (0,1]."""
+    u = jnp.asarray(utils, jnp.float32)
+    beta = 2.2
+    f = float(dominant_fairness(u, beta))
+    f_eq = float(dominant_fairness(jnp.full_like(u, float(jnp.mean(u))), beta))
+    assert f <= f_eq + 1e-3
+    fn = float(normalized_fairness(u, beta))
+    assert 0.0 < fn <= 1.0 + 1e-6
+
+
+@given(st.lists(st.floats(0.01, 1.0), min_size=2, max_size=8))
+def test_jain_bounds(utils):
+    u = jnp.asarray(utils, jnp.float32)
+    j = float(jain_index(u))
+    assert 1.0 / len(utils) - 1e-6 <= j <= 1.0 + 1e-6

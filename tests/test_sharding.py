@@ -1,0 +1,96 @@
+"""Sharding-rule invariants: every sharded dim divides its mesh axes, specs
+match leaf ranks, and ZeRO-1 only adds 'data' once."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path
+
+from repro.configs import ARCHS, get_arch
+from repro.configs.base import LM_SHAPES
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
+                                        param_pspecs, state_pspecs)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device mesh with the production axis NAMES; divisibility is checked
+    # against the production sizes separately via _fake_mesh below.
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class _FakeMesh:
+    """Production axis sizes without 256 devices."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_divide(name):
+    from repro.launch.specs import state_specs, train_config_for
+    cfg = get_arch(name)
+    tcfg = train_config_for(cfg, LM_SHAPES[0])
+    st = state_specs(cfg, tcfg)
+    specs = state_pspecs(st, cfg, _FakeMesh())
+    flat_leaves = tree_flatten_with_path(st)[0]
+    flat_specs = tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(flat_leaves) == len(flat_specs)
+    n_sharded = 0
+    for (pl, leaf), (ps, spec) in zip(flat_leaves, flat_specs):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, (pl, spec, leaf.shape)
+        seen_axes = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                assert a not in seen_axes, (pl, spec)
+                seen_axes.append(a)
+                assert dim % _FakeMesh.shape[a] == 0, (pl, spec, leaf.shape)
+            n_sharded += 1
+    assert n_sharded > 0, "nothing sharded at all"
+
+
+def test_batch_specs(mesh):
+    class FM:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    b = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+         "memory": jax.ShapeDtypeStruct((256, 1601, 64), jnp.bfloat16),
+         "small": jax.ShapeDtypeStruct((1, 8), jnp.int32)}
+    specs = batch_pspecs(b, FM())
+    assert specs["tokens"] == P(("data",), None)
+    assert specs["memory"] == P(("data",), None, None)
+    assert specs["small"] == P(None, None)   # B=1 cannot shard
+
+
+def test_cache_specs_find_batch_dim():
+    class FM:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    cache = {"body": ({"k": jax.ShapeDtypeStruct((56, 128, 4096, 8, 128),
+                                                 jnp.bfloat16)},),
+             "prefix": ({"k": jax.ShapeDtypeStruct((128, 4096, 8, 128),
+                                                   jnp.bfloat16)},)}
+    specs = cache_pspecs(cache, FM(), batch_size=128)
+    assert specs["body"][0]["k"] == P(None, ("data",), None, None, None)
+    assert specs["prefix"][0]["k"] == P(("data",), None, None, None)
+
+
+def test_moe_expert_banks_are_fsdp_sharded():
+    """kimi: expert tensors must shard over BOTH model (EP) and data (FSDP)."""
+    from repro.models import init_model
+    cfg = get_arch("kimi-k2-1t-a32b")
+    import dataclasses
+    small = dataclasses.replace(cfg, n_layers=2, prefix=(), vocab=1024,
+                                d_model=64, d_ff=32, n_heads=4, kv_heads=2,
+                                head_dim=16)
+    params = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), small, dtype=jnp.bfloat16))
+    specs = param_pspecs(params, small, _FakeMesh())
+    spec = specs["body"][0]["moe"]["w_up"]
+    flat = [a for a in spec if a is not None]
+    assert "model" in flat and "data" in flat, spec

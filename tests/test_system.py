@@ -1,0 +1,118 @@
+"""End-to-end FLaaS system test: DPBalance scheduler -> RDP grants -> ledger
+-> DP-FedAvg training, wired exactly as launch/train.py does it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core import (RoundInputs, SchedulerConfig, SimConfig,
+                        run_simulation, schedule_round)
+from repro.data.blocks import DeviceDataset
+from repro.privacy import BlockLedger, RdpAccountant
+from repro.training import (FedAvgConfig, TrainConfig, fl_round,
+                            make_loss_fn, make_state)
+
+
+def test_scheduler_beats_baselines_on_paper_setup():
+    """Reduced paper §VI simulation: DPBalance must dominate every baseline
+    on cumulative efficiency AND normalized fairness (the paper's headline)."""
+    sim = SimConfig(n_rounds=4, n_devices=20, seed=7)
+    res = {s: run_simulation(s, sim, SchedulerConfig(beta=2.2))
+           for s in ("dpbalance", "dpf", "dpk", "fcfs")}
+    ours_eff = res["dpbalance"]["cumulative_efficiency"][-1]
+    ours_fair = res["dpbalance"]["cumulative_fairness_norm"][-1]
+    for b in ("dpf", "dpk", "fcfs"):
+        assert ours_eff > res[b]["cumulative_efficiency"][-1] * 0.99, b
+        assert ours_fair > res[b]["cumulative_fairness_norm"][-1] * 0.99, b
+
+
+def test_beta_knob_moves_fairness():
+    """Q2: larger beta => more fairness, less efficiency (cumulative)."""
+    sim = SimConfig(n_rounds=3, n_devices=15, seed=3)
+    lo = run_simulation("dpbalance", sim, SchedulerConfig(beta=0.5))
+    hi = run_simulation("dpbalance", sim, SchedulerConfig(beta=5.0))
+    assert hi["round_jain"].mean() >= lo["round_jain"].mean() - 0.05
+    assert hi["cumulative_efficiency"][-1] <= \
+        lo["cumulative_efficiency"][-1] * 1.05
+
+
+def test_full_flaas_round_trip():
+    """One platform round: schedule -> debit ledger -> derive sigma -> train
+    a granted pipeline with DP-FedAvg -> accountant stays within grant."""
+    r = reduced(get_arch("flaas-100m"))
+    ledger = BlockLedger()
+    n_dev, K = 6, 6
+    for d in range(n_dev):
+        ledger.create_block(d, 1.0, now=0.0)
+
+    # one analyst, two pipelines demanding all blocks
+    demand = np.zeros((1, 2, K), np.float32)
+    demand[0, 0, :] = 0.10
+    demand[0, 1, :] = 0.05
+    rnd = RoundInputs(
+        demand=jnp.asarray(demand), active=jnp.ones((1, 2), bool),
+        arrival=jnp.zeros((1, 2)), loss=jnp.ones((1, 2)),
+        capacity=jnp.asarray(ledger.capacity_vector(range(K))),
+        budget_total=jnp.asarray(ledger.budget_vector(range(K))),
+        now=jnp.asarray(0.0))
+    res = schedule_round(rnd, SchedulerConfig(beta=2.2))
+    assert int(res.n_allocated) == 2
+
+    # debit the ledger with the scheduler's grants (vector over blocks)
+    ledger.debit_grants(np.arange(K), np.asarray(res.consumed))
+
+    # pipeline 0 trains with sigma derived from its per-block grant
+    grant = float(np.asarray(res.grants[0, 0]).max())
+    rounds = 3
+    acc = RdpAccountant(alpha_star=8.0)
+    sigma = acc.sigma_for_grant(grant, rounds)
+    assert sigma > 0
+
+    params = make_state(jax.random.PRNGKey(0), r,
+                        TrainConfig(param_dtype="float32"))["params"]
+    loss_fn = make_loss_fn(r)
+    data = {}
+    for d in range(n_dev):
+        def load(dev=d):
+            ds = DeviceDataset(dev, tokens_per_block=64, vocab=r.vocab)
+            t = ds.sample([0], seq_len=17, batch=2, seed=dev)
+            return [{"tokens": jnp.asarray(t[:, :-1]),
+                     "labels": jnp.asarray(t[:, 1:])}]
+        data[d] = load
+    for i in range(rounds):
+        params, m = fl_round(params, loss_fn, data, list(range(n_dev)),
+                             FedAvgConfig(cohort_size=3, seed=i),
+                             accountant=acc, sigma=sigma, round_idx=i)
+    # composed spend stays within the scheduler's grant
+    assert acc.spent_at_alpha_star <= grant * (1 + 1e-5)
+    eps_dp, alpha = acc.certify(delta=1e-5)
+    assert np.isfinite(eps_dp)
+    # the ledger shows the debit; blocks are not overdrawn
+    for d in range(n_dev):
+        assert ledger.device_loss(d) <= 1.0 + 1e-6
+
+
+def test_retired_blocks_leave_the_market():
+    """Blocks drained by grants become unschedulable next round."""
+    ledger = BlockLedger()
+    b = ledger.create_block(0, 0.1, 0.0)
+    demand = np.full((1, 1, 1), 0.1, np.float32)
+    rnd = RoundInputs(
+        demand=jnp.asarray(demand), active=jnp.ones((1, 1), bool),
+        arrival=jnp.zeros((1, 1)), loss=jnp.ones((1, 1)),
+        capacity=jnp.asarray(ledger.capacity_vector([b])),
+        budget_total=jnp.asarray(ledger.budget_vector([b])),
+        now=jnp.asarray(0.0))
+    res = schedule_round(rnd, SchedulerConfig())
+    ledger.debit_grants([b], np.asarray(res.consumed))
+    assert ledger.block(b).retired
+    # next round: same pipeline demand cannot be satisfied
+    rnd2 = RoundInputs(
+        demand=jnp.asarray(demand), active=jnp.ones((1, 1), bool),
+        arrival=jnp.zeros((1, 1)), loss=jnp.ones((1, 1)),
+        capacity=jnp.asarray(ledger.capacity_vector([b])),
+        budget_total=jnp.asarray(ledger.budget_vector([b])),
+        now=jnp.asarray(10.0))
+    res2 = schedule_round(rnd2, SchedulerConfig())
+    assert int(res2.n_allocated) == 0
