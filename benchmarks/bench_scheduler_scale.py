@@ -1,17 +1,87 @@
 """Scheduler scalability: schedule_round wall time across (M analysts x K
 blocks) — the production regime is K ~ 10^4-10^5 live blocks.  Also times
-the Pallas budget kernels (interpret mode on CPU) against their jnp refs."""
+the Pallas budget kernels (interpret mode on CPU) against their jnp refs,
+the scan-based engine against the legacy host-loop FlaasSimulator, and
+vmapped scenario-fleet scaling (1 -> 64 seeds)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RoundInputs, SchedulerConfig, schedule_round
+from repro.core import (RoundInputs, SchedulerConfig, SimConfig,
+                        generate_episode, run_episode, run_fleet,
+                        run_simulation, schedule_round, stack_episodes)
 from repro.kernels import ops, ref
 
 from .common import SMALL, derived, time_fn
 
 GRID = [(4, 256, 16), (8, 1024, 16)] if SMALL else \
     [(4, 256, 16), (8, 1024, 16), (16, 4096, 32), (32, 16384, 32)]
+
+# engine-vs-legacy sizes: paper default (6 x 25 x 2000) up to 16 x 64 x 4096
+# (devices chosen so K = n_devices * 2 * n_rounds).  DPBalance runs the
+# paper size; the cheap baselines also run the big sizes (SP2 swap refine
+# is O(N^2) boosted-objective evaluations — prohibitive at N = 64 on CPU).
+ENGINE_SIZES = [
+    ("paper_6x25x2000", SimConfig(seed=0), ("dpbalance", "dpf", "fcfs")),
+    ("mid_8x32x1280", SimConfig(n_analysts=8, pipelines_per_analyst=32,
+                                n_devices=64, seed=0), ("dpf", "dpk")),
+    ("big_16x64x4080", SimConfig(n_analysts=16, pipelines_per_analyst=64,
+                                 n_devices=204, seed=0), ("dpf",)),
+]
+if SMALL:
+    ENGINE_SIZES = ENGINE_SIZES[:1]
+
+FLEET_SIZES = [1, 8] if SMALL else [1, 8, 64]
+# dispatch-amortization demo scenario: small enough that per-op dispatch
+# dominates a single episode, so the one-program fleet shows its win (on
+# CPU a compute-bound fleet necessarily scales ~linearly — 2 cores; the
+# batch axis is where accelerators eat the remaining factor)
+FLEET_SIM = SimConfig(n_devices=2, n_analysts=2, pipelines_per_analyst=4,
+                      n_rounds=3, seed=0)
+
+
+def _engine_vs_legacy() -> list:
+    rows = []
+    cfg = SchedulerConfig(beta=2.2)
+    for label, sim, scheds in ENGINE_SIZES:
+        # host-side pre-generation is a one-time cost per (scenario, seed):
+        # the Episode is reused across schedulers, configs and sweeps, so
+        # it is reported separately, not folded into episode rounds/sec
+        # (the legacy loop re-does the equivalent env work every run).
+        us_gen = time_fn(lambda: generate_episode(sim), iters=3)
+        ep = generate_episode(sim)
+        for s in scheds:
+            us_e = time_fn(lambda e: run_episode(e, cfg, s), ep, iters=3)
+            us_l = time_fn(
+                lambda: run_simulation(s, sim, cfg, engine=False), iters=3)
+            rows.append((f"engine_vs_legacy/{label}/{s}", us_e, derived(
+                legacy_us=round(us_l, 1),
+                gen_us=round(us_gen, 1),
+                speedup=round(us_l / us_e, 2),
+                speedup_incl_gen=round(us_l / (us_e + us_gen), 2),
+                engine_rounds_per_s=round(sim.n_rounds / (us_e * 1e-6), 1),
+                legacy_rounds_per_s=round(sim.n_rounds / (us_l * 1e-6), 1))))
+    return rows
+
+
+def _fleet_scaling() -> list:
+    rows = []
+    cfg = SchedulerConfig(beta=2.2)
+    for s in ("dpf", "dpbalance"):
+        base_us = None
+        for n in FLEET_SIZES:
+            fleet = stack_episodes(
+                generate_episode(dataclasses.replace(FLEET_SIM, seed=k))
+                for k in range(n))
+            us = time_fn(lambda f: run_fleet(f, cfg, s), fleet, iters=3)
+            if base_us is None:
+                base_us = us
+            rows.append((f"fleet_scaling/{s}/seeds{n}", us, derived(
+                vs_single=round(us / base_us, 2),
+                us_per_seed=round(us / n, 1))))
+    return rows
 
 
 def _round(M, K, N, seed=0):
@@ -49,4 +119,6 @@ def run() -> list:
                    gamma, lam)
     rows.append((f"budget_kernel/matvec_M{M}_K{K}", us_k, derived(
         jnp_ref_us=round(us_r, 1), flops=2 * M * K)))
+    rows.extend(_engine_vs_legacy())
+    rows.extend(_fleet_scaling())
     return rows

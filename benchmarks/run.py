@@ -2,12 +2,50 @@
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_SMALL=1 shrinks workloads
 (used by CI); the full run reproduces the paper's §VI comparison numbers.
+
+``--smoke`` runs one tiny engine episode per scheduler instead (seconds,
+used by CI to keep the perf entry points importable and runnable).
 """
+import argparse
 import sys
 import traceback
 
 
+def smoke() -> int:
+    """One tiny device-resident episode per scheduler; fails loudly if any
+    perf entry point rots."""
+    from repro.core import (SCHEDULER_NAMES, SchedulerConfig, SimConfig,
+                            generate_episode, run_episode)
+    from .common import time_fn
+
+    sim = SimConfig(n_devices=4, n_analysts=3, pipelines_per_analyst=6,
+                    n_rounds=3)
+    ep = generate_episode(sim)
+    cfg = SchedulerConfig(beta=2.2)
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in SCHEDULER_NAMES:
+        try:
+            out = run_episode(ep, cfg, name)   # validates conservation
+            us = time_fn(lambda e: run_episode(e, cfg, name), ep, iters=2)
+            print(f"smoke/engine_{name},{us:.1f},"
+                  f"n_allocated={int(out['n_allocated'].sum())}")
+        except Exception as e:
+            traceback.print_exc()
+            print(f"smoke/engine_{name},NaN,error={type(e).__name__}",
+                  file=sys.stderr)
+            failures += 1
+    return failures
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny engine episode per scheduler, then exit")
+    args = parser.parse_args()
+    if args.smoke:
+        sys.exit(1 if smoke() else 0)
+
     from . import (bench_fig2, bench_fig4_5, bench_fig6, bench_kernels,
                    bench_scheduler_scale, bench_train_step)
     from .common import emit

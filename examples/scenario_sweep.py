@@ -1,0 +1,72 @@
+"""Fleet sweep: all four schedulers across a 64-seed scenario fleet.
+
+Every (scheduler, scenario) cell is ONE compiled device program — the
+engine pre-generates all episodes, stacks them on a fleet axis, and runs
+scan-over-rounds inside a batched episode axis (see docs/engine.md).
+
+    PYTHONPATH=src python examples/scenario_sweep.py
+    PYTHONPATH=src python examples/scenario_sweep.py --scenario elephant_storm
+    PYTHONPATH=src python examples/scenario_sweep.py --all-scenarios --seeds 16
+
+The default shrinks the paper's geometry (fewer devices/pipelines) so the
+full 4-scheduler x 64-seed sweep finishes in minutes on a laptop CPU; pass
+--paper-size for the full §VI geometry.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (SCENARIOS, SCHEDULER_NAMES, SchedulerConfig,
+                        generate_episode, run_fleet, scenario_config,
+                        stack_episodes)
+
+
+def sweep(scenario: str, n_seeds: int, sched_cfg, size_overrides) -> None:
+    t0 = time.perf_counter()
+    fleet = stack_episodes(
+        generate_episode(scenario_config(scenario, seed=s, **size_overrides))
+        for s in range(n_seeds))
+    gen_s = time.perf_counter() - t0
+    M, N, K = fleet.demand.shape[1:]
+    print(f"\n=== {scenario}: {n_seeds} seeds, M={M} N={N} K={K} "
+          f"R={fleet.n_rounds}  (generated in {gen_s:.1f}s) ===")
+    print(f"{'scheduler':<10} {'efficiency':>18} {'fairness_norm':>18} "
+          f"{'jain':>12} {'alloc':>8} {'wall':>8}")
+    for name in SCHEDULER_NAMES:
+        t0 = time.perf_counter()
+        out = run_fleet(fleet, sched_cfg, name)
+        wall = time.perf_counter() - t0
+        eff = np.asarray(out["cumulative_efficiency"][:, -1])
+        fn = np.asarray(out["cumulative_fairness_norm"][:, -1])
+        jain = np.asarray(out["round_jain"]).mean(axis=1)
+        alloc = np.asarray(out["n_allocated"]).sum(axis=1)
+        print(f"{name:<10} {eff.mean():9.3f} ±{eff.std():6.3f} "
+              f"{fn.mean():10.3f} ±{fn.std():6.3f} "
+              f"{jain.mean():6.3f}±{jain.std():4.2f} "
+              f"{alloc.mean():8.1f} {wall:7.2f}s")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--scenario", default="paper_default",
+                   choices=sorted(SCENARIOS))
+    p.add_argument("--all-scenarios", action="store_true",
+                   help="sweep every named scenario")
+    p.add_argument("--seeds", type=int, default=64)
+    p.add_argument("--beta", type=float, default=2.2)
+    p.add_argument("--paper-size", action="store_true",
+                   help="full §VI geometry (100 devices x 6 x 25; slow on "
+                        "CPU for dpbalance)")
+    args = p.parse_args()
+
+    size = {} if args.paper_size else dict(
+        n_devices=10, n_analysts=4, pipelines_per_analyst=8, n_rounds=8)
+    cfg = SchedulerConfig(beta=args.beta)
+    names = sorted(SCENARIOS) if args.all_scenarios else [args.scenario]
+    for scenario in names:
+        sweep(scenario, args.seeds, cfg, size)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,11 +8,14 @@ from .utility import (alpha_fair_objective, analyst_utility, default_lambda,
 from .waterfill import WaterfillResult, alpha_fair_waterfill
 from .packing import PackResult, exact_pack, greedy_cover, pack_all, pack_analyst
 from .scheduler import RoundResult, SchedulerConfig, schedule_round
-from . import baselines
 from .baselines import dpf_round, dpk_round, fcfs_round
+from .registry import (SCHEDULER_NAMES, SCHEDULERS, get_round_fn,
+                       get_scheduler)
+from .engine import (Episode, generate_episode, run_episode, run_fleet,
+                     stack_episodes)
+from .scenarios import (SCENARIOS, get_scenario, make_fleet,
+                        make_scenario_grid, scenario_config)
 from .simulation import FlaasSimulator, SimConfig, run_simulation
-
-baselines.SCHEDULERS["dpbalance"] = schedule_round
 
 __all__ = [
     "AnalystView", "RoundInputs", "analyst_demand", "analyst_max_share",
@@ -22,5 +25,9 @@ __all__ = [
     "alpha_fair_waterfill", "PackResult", "exact_pack", "greedy_cover",
     "pack_all", "pack_analyst", "RoundResult", "SchedulerConfig",
     "schedule_round", "dpf_round", "dpk_round", "fcfs_round",
-    "FlaasSimulator", "SimConfig", "run_simulation",
+    "SCHEDULER_NAMES", "SCHEDULERS", "get_round_fn", "get_scheduler",
+    "Episode", "generate_episode", "run_episode", "run_fleet",
+    "stack_episodes", "SCENARIOS", "get_scenario", "make_fleet",
+    "make_scenario_grid", "scenario_config", "FlaasSimulator", "SimConfig",
+    "run_simulation",
 ]

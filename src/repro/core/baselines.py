@@ -34,20 +34,22 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn):
     mu_ij = dm.pipeline_max_share(gamma)
     cap_frac = rnd.capacity / jnp.maximum(rnd.budget_total, _EPS)
 
-    active = rnd.active & ~jnp.any(gamma > cap_frac[None, None, :] + _FEAS, -1)
+    active = rnd.active & ~dm.infeasible_pipelines(gamma, cap_frac, _FEAS)
     key = key_fn(rnd, gamma, mu_ij)                      # [M, N]
     key = jnp.where(active, key, _BIG).reshape(-1)
     order = jnp.argsort(key)
-    gflat = gamma.reshape(M * N, K)
-    aflat = active.reshape(-1)
+    # pre-permute into visit order so the scan streams rows instead of
+    # dynamically gathering one per step
+    g_ord = gamma.reshape(M * N, K)[order]
+    a_ord = active.reshape(-1)[order]
 
-    def step(remaining, idx):
-        dem = gflat[idx]
-        ok = aflat[idx] & jnp.all(dem <= remaining + _FEAS)
+    def step(remaining, xs):
+        dem, act = xs
+        ok = act & jnp.all(dem <= remaining + _FEAS)
         remaining = jnp.where(ok, remaining - dem, remaining)
         return remaining, ok
 
-    _, taken = jax.lax.scan(step, cap_frac, order)
+    _, taken = jax.lax.scan(step, cap_frac, (g_ord, a_ord))
     sel = jnp.zeros((M * N,), bool).at[order].set(taken).reshape(M, N)
     x_ij = sel.astype(gamma.dtype)
 
@@ -103,10 +105,3 @@ def dpk_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
 def fcfs_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
     return _compiled(cfg, "fcfs")(rnd)
 
-
-SCHEDULERS = {
-    "dpbalance": None,  # filled in core/__init__ to avoid a cycle
-    "dpf": dpf_round,
-    "dpk": dpk_round,
-    "fcfs": fcfs_round,
-}

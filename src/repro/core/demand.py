@@ -50,6 +50,16 @@ def pipeline_max_share(gamma: Array) -> Array:
     return jnp.max(gamma, axis=-1)
 
 
+def infeasible_pipelines(gamma: Array, cap_frac: Array,
+                         slack: float = 1e-6) -> Array:
+    """Pipelines whose demand exceeds remaining capacity on any block —
+    they can never satisfy one-or-more this round and are masked out (they
+    stay pending for the next).  [M, N] bool.  Single source of truth for
+    the round-level feasibility rule (scheduler, baselines, engine
+    diagnostics all use it)."""
+    return jnp.any(gamma > cap_frac[None, None, :] + slack, axis=-1)
+
+
 def analyst_demand(gamma: Array, active: Array) -> Array:
     """Assembled analyst demand gamma_i^<k> = sum_j gamma_ij^<k> (Eq. 15 at
     x_ij = 1, over active pipelines).  [M, K]."""

@@ -1,0 +1,301 @@
+"""Device-resident multi-round simulation engine.
+
+The legacy :class:`~repro.core.simulation.FlaasSimulator` is a host-side
+Python loop: every round it rebuilds the padded ``[M, N, K]`` demand tensor
+from dicts, ships it to the device, runs one compiled round, and ships the
+result back.  That round-trip dominates wall time and makes sweeps (many
+seeds x many scenario parameters, paper §VI Figs. 2-6) linear in Python.
+
+This engine removes the host from the episode entirely:
+
+1. **Pre-generate** the whole episode as static-shape arrays from a seed
+   (:func:`generate_episode`).  Block growth is deterministic; pipeline
+   arrivals/demands are drawn with the *exact same numpy RNG call sequence*
+   as the legacy simulator, so the two are bit-compatible oracles of each
+   other (see ``tests/test_engine.py``).
+2. **Scan**: all rounds run in a single ``jax.lax.scan`` carrying
+   ``(capacity, done)`` — no host sync inside the episode
+   (:func:`run_episode`).  The per-round body dispatches to any scheduler
+   via :func:`repro.core.registry.get_round_fn`.
+3. **Vmap**: a batch axis over seeds / scenario parameters turns a scan
+   into a *fleet* — one compiled program evaluating dozens of scenarios
+   (:func:`run_fleet`; see :mod:`repro.core.scenarios` for generators).
+
+Static-shape convention: every pipeline (i, j) has a fixed slot for the
+whole episode.  The legacy simulator *compacts* slots as pipelines finish;
+since compaction only shifts zero-padding (it preserves the relative order
+of live pipelines and all reductions/stable-sorts in the schedulers are
+insensitive to interleaved zeros), both layouts produce identical metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import utility as ut
+from .demand import (AnalystView, RoundInputs, infeasible_pipelines,
+                     normalized_demand)
+from .registry import get_round_fn
+from .scheduler import SchedulerConfig
+
+ROUND_SECONDS = 10.0
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class Episode:
+    """One fully pre-generated episode as static-shape device arrays.
+
+    Shapes: M analysts x N pipelines/analyst x K blocks (K covers every
+    block the episode will ever create), R rounds.  A batched Episode (from
+    :func:`stack_episodes`) carries a leading fleet axis on every array.
+    """
+
+    demand: jax.Array       # [M, N, K] each pipeline's (fixed) demand vector
+    loss: jax.Array         # [M, N] matching degree l_ij
+    arrival: jax.Array      # [M, N] arrival time (seconds)
+    spawn_round: jax.Array  # [M] round the analyst's batch arrives; R = never
+    block_budget: jax.Array  # [K] total budget of each block
+    block_round: jax.Array   # [K] round each block is created
+    n_rounds: int = 10       # static — scan length
+
+    @property
+    def shape(self):
+        return self.demand.shape
+
+
+jax.tree_util.register_dataclass(
+    Episode,
+    data_fields=["demand", "loss", "arrival", "spawn_round",
+                 "block_budget", "block_round"],
+    meta_fields=["n_rounds"])
+
+
+def generate_episode(cfg) -> Episode:
+    """Pre-generate an episode from ``SimConfig`` ``cfg``.
+
+    Replays the legacy simulator's RNG call order draw-for-draw (device
+    budgets -> per-round poisson arrivals -> per-analyst device subsets ->
+    per-pipeline mice/depth/demand/loss), which is what makes the engine and
+    ``FlaasSimulator`` agree to float tolerance for every scheduler.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    M, N, R = cfg.n_analysts, cfg.pipelines_per_analyst, cfg.n_rounds
+    bpd = cfg.blocks_per_round_per_device
+    bpr = cfg.n_devices * bpd                     # blocks created per round
+    K = bpr * R
+
+    device_budget = rng.uniform(*cfg.budget_range, cfg.n_devices)
+    # block bid (created round rr, device dev, slot s) = rr*bpr + dev*bpd + s
+    block_round = np.repeat(np.arange(R, dtype=np.int32), bpr)
+    block_device = np.tile(np.repeat(np.arange(cfg.n_devices), bpd), R)
+    block_budget = device_budget[block_device].astype(np.float32)
+
+    demand = np.zeros((M, N, K), np.float32)
+    loss = np.ones((M, N), np.float32)
+    arrival = np.zeros((M, N), np.float32)
+    spawn_round = np.full(M, R, np.int32)         # R = never arrives
+
+    arrival_rate = getattr(cfg, "arrival_rate", 1.0)
+    arrived = 0
+    for r in range(R):
+        T = (r + 1) * bpd              # blocks each device has so far
+        n_new = min(rng.poisson(arrival_rate), M - arrived)
+        for _ in range(max(n_new, 1 if arrived == 0 else 0)):
+            if arrived >= M:
+                break
+            aid = arrived
+            arrived += 1
+            spawn_round[aid] = r
+            arrival[aid, :] = r * ROUND_SECONDS
+            subset = rng.random() < cfg.p_subset_devices
+            n_dev = max(1, int(cfg.subset_frac * cfg.n_devices)) if subset \
+                else cfg.n_devices
+            devices = rng.choice(cfg.n_devices, size=n_dev, replace=False)
+            for j in range(N):
+                mice = rng.random() < cfg.mice_frac
+                lo, hi = cfg.mice_eps if mice else cfg.elephant_eps
+                depth = 10 if rng.random() < cfg.p_ten_blocks else 1
+                # latest `depth` blocks of each targeted device (bid of a
+                # device's t-th block = (t//bpd)*bpr + dev*bpd + t%bpd);
+                # ONE vector draw consumes the PCG64 stream identically to
+                # the legacy simulator's per-block scalar draws
+                # (devices-outer, blocks-inner order preserved)
+                ts = np.arange(max(0, T - depth), T)
+                base = (ts // bpd) * bpr + (ts % bpd)
+                bids = (devices[:, None] * bpd + base[None, :]).reshape(-1)
+                demand[aid, j, bids] = rng.uniform(lo, hi, bids.size)
+                loss[aid, j] = rng.uniform(0.5, 1.0)
+
+    return Episode(
+        demand=jnp.asarray(demand), loss=jnp.asarray(loss),
+        arrival=jnp.asarray(arrival), spawn_round=jnp.asarray(spawn_round),
+        block_budget=jnp.asarray(block_budget),
+        block_round=jnp.asarray(block_round), n_rounds=R)
+
+
+def _episode_metrics(ep: Episode, cfg: SchedulerConfig, round_fn,
+                     diagnostics: bool) -> Dict[str, jax.Array]:
+    """Traceable: run all rounds of one episode in a single lax.scan."""
+    M, N, K = ep.demand.shape
+    f32 = ep.demand.dtype
+
+    def body(carry, r):
+        capacity, done = carry
+        created = ep.block_round <= r
+        capacity = capacity + ep.block_budget * (ep.block_round == r)
+        budget_total = jnp.where(created, ep.block_budget, 1.0)
+        active = (ep.spawn_round[:, None] <= r) & ~done
+        now = r.astype(f32) * ROUND_SECONDS
+        rnd = RoundInputs(
+            demand=ep.demand * active[..., None].astype(f32),
+            active=active,
+            arrival=jnp.where(active, ep.arrival, 0.0),
+            loss=jnp.where(active, ep.loss, 1.0),
+            capacity=capacity, budget_total=budget_total, now=now)
+        res = round_fn(rnd, cfg)
+
+        mask = jnp.sum(active, axis=1) > 0
+        out = {
+            "round_efficiency": res.efficiency,
+            "round_fairness": res.fairness,
+            "round_fairness_norm": ut.normalized_fairness(
+                res.utility, cfg.beta, mask),
+            "round_jain": res.jain,
+            "n_allocated": res.n_allocated,
+            "leftover": jnp.sum(res.leftover),
+            # conservation invariant: consumed + leftover == round-start
+            # capacity on every live block, and no overdraw, by construction
+            # of RoundResult — surfaced here so tests can assert it for any
+            # scheduler plugged into the engine.
+            "conservation_gap": jnp.max(jnp.abs(
+                jnp.where(created, capacity - res.consumed - res.leftover,
+                          0.0))),
+            "overdraw": jnp.max(res.consumed - capacity),
+        }
+        if diagnostics:
+            gamma = normalized_demand(rnd.demand, budget_total)
+            # replicate the scheduler's own pipeline masking (pipelines
+            # demanding exhausted blocks are dropped for the round) so the
+            # per-analyst aggregates match what the solver actually saw.
+            cap_frac = capacity / jnp.maximum(budget_total, _EPS)
+            unsat = infeasible_pipelines(gamma, cap_frac)
+            sched_rnd = dataclasses.replace(rnd, active=active & ~unsat)
+            view = AnalystView.build(sched_rnd, cfg.tau)
+            out.update(
+                utility=res.utility,
+                analyst_mask=view.mask,
+                a_i=view.a_i,
+                gamma_i=view.gamma_i,
+                mu_i=view.mu_i,
+                x_analyst=res.x_analyst,
+                sp1_violation=res.sp1_violation,
+                # realized per-analyst grant in normalized (share) units
+                granted_i=jnp.sum(gamma * res.x_pipeline[..., None], axis=1),
+                cap_frac=cap_frac,
+                selected=res.selected,
+            )
+
+        capacity = jnp.maximum(capacity - res.consumed, 0.0)
+        done = done | res.selected
+        return (capacity, done), out
+
+    init = (jnp.zeros((K,), f32), jnp.zeros((M, N), bool))
+    (capacity, done), ys = jax.lax.scan(
+        body, init, jnp.arange(ep.n_rounds, dtype=jnp.int32))
+    ys["final_capacity"] = capacity
+    ys["final_done"] = done
+    ys["cumulative_efficiency"] = jnp.cumsum(ys["round_efficiency"])
+    ys["cumulative_fairness"] = jnp.cumsum(ys["round_fairness"])
+    ys["cumulative_fairness_norm"] = jnp.cumsum(ys["round_fairness_norm"])
+    return ys
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_episode(scheduler: str, cfg: SchedulerConfig,
+                      diagnostics: bool):
+    round_fn = get_round_fn(scheduler)
+    return jax.jit(functools.partial(
+        _episode_metrics, cfg=cfg, round_fn=round_fn,
+        diagnostics=diagnostics))
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_fleet(scheduler: str, cfg: SchedulerConfig, diagnostics: bool,
+                    mode: str):
+    round_fn = get_round_fn(scheduler)
+    body = functools.partial(_episode_metrics, cfg=cfg, round_fn=round_fn,
+                             diagnostics=diagnostics)
+    if mode == "vmap":
+        return jax.jit(jax.vmap(body))
+    if mode == "map":
+        # one compiled program, episodes sequential inside it: on CPU this
+        # beats vmap 2-3x (no batched gathers/while_loops), on accelerators
+        # vmap's lockstep batching wins.
+        return jax.jit(lambda fleet: jax.lax.map(body, fleet))
+    raise ValueError(f"unknown fleet mode {mode!r}; use 'vmap'/'map'/'auto'")
+
+
+def run_episode(episode: Episode, sched_cfg: SchedulerConfig,
+                scheduler: str = "dpbalance", *, diagnostics: bool = False,
+                validate: bool = True) -> Dict[str, jax.Array]:
+    """Run one episode end-to-end on device; one jit compile per
+    (scheduler, config, shape).
+
+    Returns per-round metric arrays ``[R]`` (plus ``[R, ...]`` diagnostics
+    when requested) and ``final_*`` episode-end state.  With ``validate``,
+    the capacity-conservation invariant recorded inside the scan is checked
+    on the host after the episode completes.
+    """
+    out = _compiled_episode(scheduler, sched_cfg, diagnostics)(episode)
+    if validate:
+        _check_conservation(out, scheduler)
+    return out
+
+
+def run_fleet(fleet: Episode, sched_cfg: SchedulerConfig,
+              scheduler: str = "dpbalance", *, diagnostics: bool = False,
+              validate: bool = True,
+              mode: str = "auto") -> Dict[str, jax.Array]:
+    """Run a batched Episode (leading fleet axis, from
+    :func:`stack_episodes`) as ONE compiled program: a batch of episodes,
+    a scan over rounds inside each.
+
+    ``mode``: 'vmap' batches episodes in lockstep (best on accelerators),
+    'map' runs them sequentially inside one compiled program (best on CPU
+    — avoids batched gathers and lockstep while_loops), 'auto' picks by
+    backend.
+    """
+    if mode == "auto":
+        mode = "map" if jax.default_backend() == "cpu" else "vmap"
+    out = _compiled_fleet(scheduler, sched_cfg, diagnostics, mode)(fleet)
+    if validate:
+        _check_conservation(out, scheduler)
+    return out
+
+
+def _check_conservation(out: Dict[str, jax.Array], scheduler: str) -> None:
+    gap = float(jnp.max(out["conservation_gap"]))
+    over = float(jnp.max(out["overdraw"]))
+    if gap > 1e-4 or over > 1e-4:
+        raise AssertionError(
+            f"budget conservation violated under {scheduler!r}: "
+            f"max |capacity - consumed - leftover| = {gap:.3e}, "
+            f"max overdraw = {over:.3e}")
+
+
+def stack_episodes(episodes) -> Episode:
+    """Stack same-shape Episodes along a new leading fleet axis."""
+    episodes = list(episodes)
+    if not episodes:
+        raise ValueError("need at least one episode")
+    rounds = {ep.n_rounds for ep in episodes}
+    if len(rounds) > 1:
+        raise ValueError(f"episodes disagree on n_rounds: {sorted(rounds)}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *episodes)

@@ -60,22 +60,31 @@ def greedy_cover(gamma, mu, active, budget):
 
 def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float):
     """Eq 20 heuristic: x=1 for selected, then greedy kappa boosts in
-    descending mu*a order.  Returns (x_ij, used, objective)."""
+    descending mu*a order.  Returns (x_ij, used, objective).
+
+    The visit order is the FIXED descending-mu*a order over all pipelines
+    (unselected ones are no-ops: extra = 0, leftover unchanged), which is
+    step-for-step identical to sorting only the selected set but lets the
+    scan carry pre-permuted gamma rows instead of dynamically gathering a
+    row per step — under swap_refine's candidate vmap that removes one
+    [n_candidates, K] gather per scan step (sel is the only batched input)."""
     base_used = jnp.sum(gamma * sel[:, None], axis=0)
     leftover = budget - base_used
 
-    key = jnp.where(sel, -(mu * a), _BIG)  # descending mu*a among selected
-    order = jnp.argsort(key)
+    order = jnp.argsort(-(mu * a))          # fixed: selection-independent
+    g_ord = gamma[order]                     # [N, K], gathered once
+    sel_ord = sel[order]
 
-    def step(leftover, idx):
-        dem = gamma[idx]
-        ratio = jnp.where(dem > _EPS, leftover / jnp.maximum(dem, _EPS), jnp.inf)
+    def step(leftover, xs):
+        dem, is_sel = xs
+        ratio = jnp.where(dem > _EPS, leftover / jnp.maximum(dem, _EPS),
+                          jnp.inf)
         extra = jnp.clip(jnp.min(ratio), 0.0, kappa_max - 1.0)
-        extra = jnp.where(sel[idx], extra, 0.0)
+        extra = jnp.where(is_sel, extra, 0.0)
         leftover = leftover - extra * dem
         return leftover, extra
 
-    leftover, extras = jax.lax.scan(step, leftover, order)
+    leftover, extras = jax.lax.scan(step, leftover, (g_ord, sel_ord))
     x = jnp.zeros_like(mu).at[order].set(extras)
     x = jnp.where(sel, 1.0 + x, 0.0)
     used = jnp.sum(gamma * x[:, None], axis=0)
@@ -84,7 +93,8 @@ def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float):
 
 
 def _boost_objective(gamma, mu, a, active, sel, budget, kappa_max):
-    _, _, obj = proportional_boost(gamma, mu, a, active, sel, budget, kappa_max)
+    _, _, obj = proportional_boost(gamma, mu, a, active, sel, budget,
+                                   kappa_max)
     return obj
 
 
@@ -121,7 +131,8 @@ def pack_analyst(gamma, mu, a, active, budget,
     sel = greedy_cover(gamma, mu, active, budget)
     if refine:
         sel = swap_refine(gamma, mu, a, active, sel, budget, kappa_max)
-    x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget, kappa_max)
+    x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget,
+                                      kappa_max)
     return PackResult(x_ij=x, selected=sel, used=used, objective=obj)
 
 

@@ -1,0 +1,62 @@
+"""Scheduler registry — the one place that knows every scheduler's name.
+
+`baselines.py` used to carry a ``SCHEDULERS`` dict with a ``"dpbalance":
+None`` placeholder that ``core/__init__`` patched after import (baselines
+cannot import ``scheduler``'s round entry point without a cycle at module
+level — scheduler.py is imported *by* baselines for the shared
+RoundResult/SchedulerConfig types).  This module sits above both and owns
+dispatch, so callers (engine, simulation, benchmarks, examples) stop
+hand-rolling their own dicts.
+
+Two access levels:
+
+* :func:`get_scheduler` — the public, jit-cached per-config entry point
+  (what you call from host code, one compiled program per round).
+* :func:`get_round_fn` — the underlying traceable function, for embedding
+  a scheduler inside a larger jit program (the engine's ``lax.scan`` body,
+  a vmapped fleet, ...).  Calling the jit-wrapped entry there would also
+  work (jit inlines under jit) but the raw function keeps tracing simple.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+from . import baselines, scheduler
+from .demand import RoundInputs
+from .scheduler import RoundResult, SchedulerConfig
+
+SCHEDULER_NAMES = ("dpbalance", "dpf", "dpk", "fcfs")
+
+# name -> public (jit-cached) per-round entry point
+SCHEDULERS: dict = {
+    "dpbalance": scheduler.schedule_round,
+    "dpf": baselines.dpf_round,
+    "dpk": baselines.dpk_round,
+    "fcfs": baselines.fcfs_round,
+}
+
+
+def get_scheduler(name: str) -> Callable[[RoundInputs, SchedulerConfig],
+                                         RoundResult]:
+    """Public per-round entry point for `name` (jit-cached per config)."""
+    try:
+        return SCHEDULERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; expected one of {SCHEDULER_NAMES}"
+        ) from None
+
+
+def get_round_fn(name: str) -> Callable[[RoundInputs, SchedulerConfig],
+                                        RoundResult]:
+    """Traceable round function for `name` — safe to call inside jit/scan/
+    vmap.  Signature matches :func:`get_scheduler`."""
+    if name == "dpbalance":
+        return scheduler._schedule_round
+    if name in ("dpf", "dpk", "fcfs"):
+        key_fn = {"dpf": baselines._dpf_key, "dpk": baselines._dpk_key,
+                  "fcfs": baselines._fcfs_key}[name]
+        return functools.partial(baselines._sequential_grant, key_fn=key_fn)
+    raise ValueError(
+        f"unknown scheduler {name!r}; expected one of {SCHEDULER_NAMES}")

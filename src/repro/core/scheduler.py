@@ -67,8 +67,7 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
     # Pipelines demanding exhausted blocks can never satisfy one-or-more:
     # mask them out of this round (they stay pending for the next).
     cap_frac = rnd.capacity / jnp.maximum(rnd.budget_total, _EPS)
-    unsat = jnp.any((gamma > cap_frac[None, None, :] + 1e-6), axis=-1)
-    active = rnd.active & ~unsat
+    active = rnd.active & ~dm.infeasible_pipelines(gamma, cap_frac)
     rnd = dataclasses.replace(rnd, active=active)
 
     view = dm.AnalystView.build(rnd, cfg.tau)

@@ -17,16 +17,21 @@ with the same RoundInputs, accumulating the paper's four metrics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import Dict, List
 
 import numpy as np
 import jax.numpy as jnp
 
 from .demand import RoundInputs
-from .scheduler import RoundResult, SchedulerConfig, schedule_round
-from . import baselines
+from .scheduler import RoundResult, SchedulerConfig
 
 ROUND_SECONDS = 10.0
+
+# run_simulation's result schema (both the engine and the legacy path)
+_RESULT_KEYS = ("round_efficiency", "round_fairness", "round_fairness_norm",
+                "cumulative_efficiency", "cumulative_fairness",
+                "cumulative_fairness_norm", "round_jain", "n_allocated",
+                "leftover")
 
 
 @dataclasses.dataclass
@@ -43,6 +48,7 @@ class SimConfig:
     p_ten_blocks: float = 0.25
     p_subset_devices: float = 0.5
     subset_frac: float = 0.2
+    arrival_rate: float = 1.0  # Poisson analyst-batch arrivals per round
     seed: int = 0
     pad_blocks: bool = True  # pre-size K so shapes are static (one jit compile)
 
@@ -83,7 +89,8 @@ class FlaasSimulator:
 
     def _spawn_pipelines(self):
         cfg, rng = self.cfg, self.rng
-        n_new = min(rng.poisson(1.0), cfg.n_analysts - self._arrived)
+        n_new = min(rng.poisson(cfg.arrival_rate),
+                    cfg.n_analysts - self._arrived)
         for _ in range(max(n_new, 1 if self._arrived == 0 else 0)):
             if self._arrived >= cfg.n_analysts:
                 break
@@ -145,7 +152,9 @@ class FlaasSimulator:
 
     def apply(self, result: RoundResult):
         consumed = np.asarray(result.consumed)[: len(self.block_capacity)]
-        cap = np.asarray(self.block_capacity)
+        # float32 like the scheduler (and the engine's device carry) — the
+        # capacity the scheduler actually saw is the f32 rounding anyway.
+        cap = np.asarray(self.block_capacity, np.float32)
         self.block_capacity = list(np.maximum(cap - consumed, 0.0))
         selected = np.asarray(result.selected)
         for pid, (i, j) in self._slot_of.items():
@@ -157,20 +166,27 @@ class FlaasSimulator:
 
 
 def run_simulation(scheduler: str, sim_cfg: SimConfig,
-                   sched_cfg: SchedulerConfig) -> Dict[str, np.ndarray]:
+                   sched_cfg: SchedulerConfig, *,
+                   engine: bool = True) -> Dict[str, np.ndarray]:
     """Drive `scheduler` in {'dpbalance','dpf','dpk','fcfs'} for n_rounds.
 
     Returns per-round and cumulative efficiency/fairness (+ jain, #allocated).
+
+    By default delegates to the device-resident engine (one lax.scan over
+    the whole episode — see :mod:`repro.core.engine`).  ``engine=False``
+    drives the legacy host-side :class:`FlaasSimulator` round by round; it
+    is kept as the engine's reference oracle (``tests/test_engine.py``
+    pins the two to 1e-5 agreement) and for debugging round internals.
     """
-    fns: Dict[str, Callable] = {
-        "dpbalance": lambda r, c: schedule_round(r, c),
-        "dpf": baselines.dpf_round,
-        "dpk": baselines.dpk_round,
-        "fcfs": baselines.fcfs_round,
-    }
+    if engine:
+        from .engine import generate_episode, run_episode
+        out = run_episode(generate_episode(sim_cfg), sched_cfg, scheduler)
+        return {k: np.asarray(out[k]) for k in _RESULT_KEYS}
+
+    from .registry import get_scheduler
     from .utility import normalized_fairness
 
-    fn = fns[scheduler]
+    fn = get_scheduler(scheduler)
     sim = FlaasSimulator(sim_cfg)
     eff, fair, fnorm, jain, nalloc, leftover = [], [], [], [], [], []
     for _ in range(sim_cfg.n_rounds):
@@ -185,9 +201,12 @@ def run_simulation(scheduler: str, sim_cfg: SimConfig,
         fnorm.append(float(normalized_fairness(res.utility, sched_cfg.beta, mask)))
         jain.append(float(res.jain))
         nalloc.append(int(res.n_allocated))
-        leftover.append(float(np.sum(np.asarray(res.leftover))))
+        # device-side reduction, same op (and summation order) as the engine
+        leftover.append(float(jnp.sum(res.leftover)))
         sim.step_time()
-    eff, fair, fnorm = np.asarray(eff), np.asarray(fair), np.asarray(fnorm)
+    eff, fair, fnorm = (np.asarray(eff, np.float32),
+                        np.asarray(fair, np.float32),
+                        np.asarray(fnorm, np.float32))
     return {
         "round_efficiency": eff,
         "round_fairness": fair,

@@ -35,6 +35,10 @@ _FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
              "after-all", "partition-id", "replica-id"}
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# Operand in a call arg list.  Old HLO printers inline the operand type
+# ("f32[128,256]{1,0} %Arg_0.1"); new ones print bare names ("%Arg_0.1");
+# the '%' sigil itself is optional in some dump styles.
+_OPERAND_RE = re.compile(r"(?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%?([\w.\-]+)")
 _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
 _CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{")
@@ -46,6 +50,12 @@ def _shapes_in(type_str: str) -> List[Tuple[str, List[int]]]:
         dims = [int(d) for d in m.group(2).split(",") if d]
         out.append((m.group(1), dims))
     return out
+
+
+def _operands(rest: str) -> List[Tuple[str, Optional[str]]]:
+    """(name, inline_type_or_None) per operand of an op's argument list."""
+    args = rest.split(")", 1)[0]
+    return [(m.group(2), m.group(1)) for m in _OPERAND_RE.finditer(args)]
 
 
 def _nbytes(type_str: str) -> int:
@@ -127,9 +137,11 @@ class HloModuleAnalysis:
         m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
         contract = 1
         if m:
-            args = op.rest.split(")", 1)[0]
-            first = args.split(",")[0].strip().lstrip("%")
-            lhs_type = symbols.get(first)
+            operands = _operands(op.rest)
+            lhs_type = None
+            if operands:
+                name, inline = operands[0]
+                lhs_type = inline or symbols.get(name)
             if lhs_type:
                 shapes = _shapes_in(lhs_type)
                 if shapes:
@@ -152,9 +164,9 @@ class HloModuleAnalysis:
                 if sop.opcode == "dot":
                     total.flops += self._dot_flops(sop, syms)
                 elif sop.opcode == "dynamic-update-slice":
-                    args = [a.strip().lstrip("%") for a in
-                            sop.rest.split(")", 1)[0].split(",")]
-                    upd = syms.get(args[1]) if len(args) > 1 else None
+                    args = _operands(sop.rest)
+                    upd = (args[1][1] or syms.get(args[1][0])) \
+                        if len(args) > 1 else None
                     shapes = _shapes_in(sop.type_str)
                     if shapes:
                         key = (shapes[0][0], tuple(shapes[0][1]))
@@ -212,9 +224,9 @@ class HloModuleAnalysis:
             if oc == "dynamic-update-slice":
                 # in-place slice write: traffic is the UPDATE slice (read +
                 # write), not the full aliased buffer.
-                args = [a.strip().lstrip("%") for a in
-                        op.rest.split(")", 1)[0].split(",")]
-                upd = symbols.get(args[1]) if len(args) > 1 else None
+                args = _operands(op.rest)
+                upd = (args[1][1] or symbols.get(args[1][0])) \
+                    if len(args) > 1 else None
                 total.bytes_hbm += 2 * (_nbytes(upd) if upd
                                         else _nbytes(op.type_str))
                 continue

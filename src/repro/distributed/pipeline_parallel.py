@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import compat
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh,
                    axis: str = "pod"):
@@ -71,8 +73,8 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh,
         outputs = jnp.where(stage == n_stages - 1, outputs, 0.0)
         return jax.lax.psum(outputs, axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
-        check_vma=False)
+        check=False)
     return fn(stage_params, x_micro)

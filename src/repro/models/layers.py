@@ -130,7 +130,8 @@ def maybe_constrain(x, *axes, opt: str = "cp"):
     Each entry is None, an axis name, or a tuple of axis names."""
     if _opt_disabled(opt):
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.distributed.compat import get_mesh
+    mesh = get_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     sizes = dict(mesh.shape)

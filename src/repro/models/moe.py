@@ -82,7 +82,8 @@ def _expert_compute_sharding(w, down: bool = False):
     GSPMD emit partial-sum einsums + fp32 activation all-reduces over 'data'
     (the dominant collective in the kimi/mixtral baselines; §Perf iter 3)."""
     from .layers import maybe_constrain
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.distributed.compat import get_mesh
+    mesh = get_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return w
     tp = dict(mesh.shape)["model"]

@@ -5,9 +5,16 @@ import sys
 # the dry-run ONLY — launch/dryrun.py sets it before jax import).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import HealthCheck, settings
+# hypothesis is optional: the property-based tests (test_properties.py) skip
+# themselves via pytest.importorskip, but the suite as a whole must collect
+# and run on machines without it.
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    settings = None
 
-settings.register_profile(
-    "ci", max_examples=20, deadline=None, derandomize=True,
-    suppress_health_check=[HealthCheck.too_slow])
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile(
+        "ci", max_examples=20, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile("ci")

@@ -43,14 +43,15 @@ def test_sharded_train_step_numerics_match_single_device():
         step = jax.jit(functools.partial(train_step, cfg=r, tcfg=tcfg))
         _, m1 = step(state, batch)
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.set_mesh(mesh):
-            st_specs = state_pspecs(state, r, mesh)
-            b_specs = batch_pspecs(batch, mesh)
+        from repro.distributed.compat import make_mesh, named_shardings, set_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
+        with set_mesh(mesh):
+            st_specs = named_shardings(mesh, state_pspecs(state, r, mesh))
+            b_specs = named_shardings(mesh, batch_pspecs(batch, mesh))
             stepd = jax.jit(functools.partial(train_step, cfg=r, tcfg=tcfg),
                             in_shardings=(st_specs, b_specs),
-                            out_shardings=(st_specs, P()))
+                            out_shardings=(st_specs,
+                                           named_shardings(mesh, P())))
             _, m2 = stepd(state, batch)
         d = abs(float(m1["loss"]) - float(m2["loss"]))
         assert d < 1e-3, d
@@ -65,12 +66,12 @@ def test_compressed_psum_multidevice():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.training import compressed_psum
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.compat import make_mesh, shard_map
+        mesh = make_mesh((4,), ("pod",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 16)) * 2
-        f = jax.jit(jax.shard_map(lambda t: compressed_psum(t, "pod"),
-                                  mesh=mesh, in_specs=P("pod"),
-                                  out_specs=P("pod")))
+        f = jax.jit(shard_map(lambda t: compressed_psum(t, "pod"),
+                              mesh=mesh, in_specs=P("pod"),
+                              out_specs=P("pod")))
         out = f(x)   # psum of per-shard slices, broadcast back
         # each shard's output = sum over shards of its own slice? No:
         # psum over pod of [2,16] shards -> every shard holds the sum.
@@ -101,8 +102,8 @@ def test_pipeline_parallel_matches_sequential():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline_parallel import pipeline_apply
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.compat import make_mesh
+        mesh = make_mesh((4,), ("pod",))
         n_stages, n_micro, d = 4, 8, 16
         ks = jax.random.split(jax.random.PRNGKey(0), 2)
         w = jax.random.normal(ks[0], (n_stages, d, d)) * 0.3

@@ -1,0 +1,201 @@
+"""Device-resident engine tests: legacy parity (the engine's correctness
+oracle), the paper's fairness axioms as numeric regressions, capacity
+conservation inside the scan, fleet/vmap consistency, scenario library,
+and the scheduler registry."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SCENARIOS, SCHEDULER_NAMES, RoundInputs,
+                        SchedulerConfig, SimConfig, generate_episode,
+                        get_round_fn, get_scheduler, make_fleet, run_episode,
+                        run_fleet, run_simulation, scenario_config,
+                        stack_episodes)
+
+_TINY = 1e-9
+
+SMALL = SimConfig(n_devices=8, n_analysts=3, pipelines_per_analyst=6,
+                  n_rounds=4)
+
+
+class TestParity:
+    """Same seed + paper-default SimConfig: the engine and the legacy
+    FlaasSimulator must agree within 1e-5 for every scheduler."""
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    def test_engine_matches_legacy_paper_default(self, scheduler):
+        sim, cfg = SimConfig(seed=0), SchedulerConfig(beta=2.2)
+        eng = run_simulation(scheduler, sim, cfg, engine=True)
+        leg = run_simulation(scheduler, sim, cfg, engine=False)
+        for key in ("round_efficiency", "round_fairness", "n_allocated",
+                    "leftover"):
+            np.testing.assert_allclose(
+                eng[key], leg[key], rtol=1e-5, atol=1e-5,
+                err_msg=f"{scheduler}/{key}")
+
+    def test_engine_matches_legacy_all_keys_small(self):
+        sim, cfg = dataclasses.replace(SMALL, seed=3), SchedulerConfig()
+        for scheduler in SCHEDULER_NAMES:
+            eng = run_simulation(scheduler, sim, cfg, engine=True)
+            leg = run_simulation(scheduler, sim, cfg, engine=False)
+            assert eng.keys() == leg.keys()
+            for key in eng:
+                np.testing.assert_allclose(
+                    eng[key], leg[key], rtol=1e-5, atol=1e-5,
+                    err_msg=f"{scheduler}/{key}")
+
+    def test_episode_generation_deterministic(self):
+        a, b = generate_episode(SMALL), generate_episode(SMALL)
+        np.testing.assert_array_equal(np.asarray(a.demand),
+                                      np.asarray(b.demand))
+        np.testing.assert_array_equal(np.asarray(a.spawn_round),
+                                      np.asarray(b.spawn_round))
+
+
+class TestFairnessAxioms:
+    """Paper Thms 2-3 as numeric regressions on 3 seeds of the default
+    scenario (diagnostics come from the scheduler's own per-round view)."""
+
+    @pytest.fixture(scope="class", params=[0, 1, 2])
+    def diag(self, request):
+        out = run_episode(generate_episode(SimConfig(seed=request.param)),
+                          SchedulerConfig(beta=2.2), "dpbalance",
+                          diagnostics=True)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    def test_sharing_incentive(self, diag):
+        """Each analyst's episode utility >= what a static 1/M partition
+        of every block's budget would have given it (Thm 2)."""
+        g, cf = diag["gamma_i"], diag["cap_frac"]
+        mu, a, msk = diag["mu_i"], diag["a_i"], diag["analyst_mask"]
+        M = g.shape[1]
+        ratio = np.where(g > _TINY, cf[:, None, :] / np.maximum(g, _TINY) / M,
+                         np.inf)
+        x_even = np.where(mu > _TINY, ratio.min(-1), 0.0)
+        u_even = np.where(msk, a * mu * x_even, 0.0)
+        total, even = diag["utility"].sum(0), u_even.sum(0)
+        assert np.all(total >= even * 0.99 - 1e-4), (total, even)
+
+    def test_envy_freeness(self, diag):
+        """No analyst prefers another's SP1 grant vector (Thm 3): the
+        largest multiple of its own demand that fits in the other's bundle
+        never beats its own allocation ratio."""
+        g, x1 = diag["gamma_i"], diag["x_analyst"]
+        mu, a, msk = diag["mu_i"], diag["a_i"], diag["analyst_mask"]
+        R = g.shape[0]
+        worst = 0.0
+        for r in range(R):
+            for i in np.where(msk[r])[0]:
+                own = a[r, i] * mu[r, i] * x1[r, i]
+                for j in np.where(msk[r])[0]:
+                    if i == j:
+                        continue
+                    bundle = g[r, j] * x1[r, j]
+                    x_swap = np.where(
+                        g[r, i] > _TINY,
+                        bundle / np.maximum(g[r, i], _TINY), np.inf).min()
+                    worst = max(worst, a[r, i] * mu[r, i] * x_swap - own)
+        assert worst <= 1e-3, worst
+
+    def test_capacity_conservation(self, diag):
+        """consumed + leftover == round-start capacity, no overdraw —
+        recorded inside the engine scan every round."""
+        assert float(np.max(diag["conservation_gap"])) <= 1e-4
+        assert float(np.max(diag["overdraw"])) <= 1e-4
+
+
+class TestConservationAllSchedulers:
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    def test_invariant_holds(self, scheduler):
+        out = run_episode(generate_episode(SMALL), SchedulerConfig(),
+                          scheduler)
+        assert float(jnp.max(out["conservation_gap"])) <= 1e-4
+        assert float(jnp.max(out["overdraw"])) <= 1e-4
+
+
+class TestFleet:
+    """A vmapped/mapped fleet must reproduce per-episode runs exactly."""
+
+    @pytest.mark.parametrize("mode", ["vmap", "map"])
+    def test_fleet_matches_individual_episodes(self, mode):
+        cfg = SchedulerConfig()
+        eps = [generate_episode(dataclasses.replace(SMALL, seed=s))
+               for s in range(3)]
+        fleet_out = run_fleet(stack_episodes(eps), cfg, "dpf", mode=mode)
+        for s, ep in enumerate(eps):
+            solo = run_episode(ep, cfg, "dpf")
+            for key in ("round_efficiency", "n_allocated", "leftover",
+                        "cumulative_efficiency"):
+                np.testing.assert_allclose(
+                    np.asarray(fleet_out[key][s]), np.asarray(solo[key]),
+                    rtol=1e-6, atol=1e-6, err_msg=f"seed{s}/{key}/{mode}")
+
+    def test_fleet_shape_mismatch_rejected(self):
+        eps = [generate_episode(SMALL),
+               generate_episode(dataclasses.replace(SMALL, n_rounds=3))]
+        with pytest.raises(ValueError):
+            stack_episodes(eps)
+
+
+class TestScenarios:
+    def test_catalog_covers_paper_and_beyond(self):
+        assert "paper_default" in SCENARIOS
+        assert len(SCENARIOS) >= 7    # >= 6 named scenarios beyond default
+
+    def test_paper_default_is_the_paper_config(self):
+        assert scenario_config("paper_default", seed=5) == SimConfig(seed=5)
+
+    def test_overrides_apply(self):
+        cfg = scenario_config("bursty_arrivals", seed=1)
+        assert cfg.arrival_rate == 3.0 and cfg.seed == 1
+        cfg = scenario_config("tight_budgets")
+        assert cfg.budget_range == (0.4, 0.6)
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(ValueError):
+            scenario_config("no_such_scenario")
+
+    def test_make_fleet_shapes(self):
+        fleet = make_fleet("mice_fleet", n_seeds=2, n_devices=8,
+                           n_analysts=3, pipelines_per_analyst=6, n_rounds=4)
+        M, N, K = SMALL.n_analysts, SMALL.pipelines_per_analyst, \
+            SMALL.n_devices * SMALL.blocks_per_round_per_device * \
+            SMALL.n_rounds
+        assert fleet.demand.shape == (2, M, N, K)
+        assert fleet.n_rounds == 4
+
+
+class TestRegistry:
+    def test_names_and_dispatch(self):
+        assert set(SCHEDULER_NAMES) == {"dpbalance", "dpf", "dpk", "fcfs"}
+        for name in SCHEDULER_NAMES:
+            assert callable(get_scheduler(name))
+            assert callable(get_round_fn(name))
+
+    def test_unknown_scheduler_raises(self):
+        with pytest.raises(ValueError):
+            get_scheduler("gurobi")
+        with pytest.raises(ValueError):
+            get_round_fn("gurobi")
+
+    def test_round_fn_matches_public_entry(self):
+        demand = np.zeros((2, 2, 2), np.float32)
+        demand[0, 0] = [0.5, 0.3]
+        demand[0, 1] = [0.3, 0.5]
+        demand[1, 0] = [0.4, 0.3]
+        demand[1, 1] = [0.3, 0.3]
+        rnd = RoundInputs(
+            demand=jnp.asarray(demand), active=jnp.ones((2, 2), bool),
+            arrival=jnp.zeros((2, 2)), loss=jnp.ones((2, 2)),
+            capacity=jnp.ones(2), budget_total=jnp.ones(2),
+            now=jnp.asarray(0.0))
+        cfg = SchedulerConfig(beta=2.2)
+        for name in SCHEDULER_NAMES:
+            a = get_scheduler(name)(rnd, cfg)
+            b = get_round_fn(name)(rnd, cfg)
+            np.testing.assert_allclose(np.asarray(a.efficiency),
+                                       np.asarray(b.efficiency), atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(a.selected),
+                                          np.asarray(b.selected))

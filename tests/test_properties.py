@@ -8,6 +8,9 @@ tolerances.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests require hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -16,8 +16,8 @@ from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
 def mesh():
     # 1-device mesh with the production axis NAMES; divisibility is checked
     # against the production sizes separately via _fake_mesh below.
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class _FakeMesh:

@@ -132,10 +132,11 @@ def test_compressed_psum_shard_map():
     """int8 all-reduce under shard_map on a 1-device mesh (semantics check;
     multi-device path exercised in test_distributed.py subprocess)."""
     from repro.training import compressed_psum
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((1,), ("pod",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 8)) * 3
-    f = jax.shard_map(lambda t: compressed_psum(t, "pod"), mesh=mesh,
+    from repro.distributed.compat import shard_map
+    f = shard_map(lambda t: compressed_psum(t, "pod"), mesh=mesh,
                       in_specs=jax.sharding.PartitionSpec(),
                       out_specs=jax.sharding.PartitionSpec())
     out = f(x)
