@@ -10,8 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (RoundInputs, SchedulerConfig, SimConfig,
-                        generate_episode, run_episode, run_fleet,
-                        run_simulation, schedule_round, stack_episodes)
+                        generate_episode, resolve_fleet_mode, run_episode,
+                        run_fleet, run_simulation, schedule_round,
+                        stack_episodes)
 from repro.kernels import ops, ref
 
 from .common import SMALL, derived, time_fn
@@ -69,6 +70,7 @@ def _engine_vs_legacy() -> list:
 def _fleet_scaling() -> list:
     rows = []
     cfg = SchedulerConfig(beta=2.2)
+    mode = resolve_fleet_mode("auto")   # what run_fleet actually executes
     for s in ("dpf", "dpbalance"):
         base_us = None
         for n in FLEET_SIZES:
@@ -80,7 +82,8 @@ def _fleet_scaling() -> list:
                 base_us = us
             rows.append((f"fleet_scaling/{s}/seeds{n}", us, derived(
                 vs_single=round(us / base_us, 2),
-                us_per_seed=round(us / n, 1))))
+                us_per_seed=round(us / n, 1),
+                mode=mode)))
     return rows
 
 

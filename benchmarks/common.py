@@ -1,6 +1,7 @@
-"""Shared benchmark utilities — timing + CSV row emission."""
+"""Shared benchmark utilities — timing, CSV row emission, JSON report."""
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Callable, Dict, List, Tuple
@@ -8,6 +9,48 @@ from typing import Callable, Dict, List, Tuple
 Row = Tuple[str, float, str]   # (name, us_per_call, derived "k=v;k=v")
 
 SMALL = bool(int(os.environ.get("BENCH_SMALL", "0")))
+
+
+def run_meta() -> Dict[str, str]:
+    """Environment facts every benchmark report must carry — notably the
+    backend and the mode ``run_fleet(mode='auto')`` resolves to on it, so
+    the ROADMAP item "pick per-backend fleet defaults from data" can be
+    closed from emitted data rather than re-derived by hand."""
+    import jax
+    from repro.core import resolve_fleet_mode
+    return {
+        "backend": jax.default_backend(),
+        "fleet_mode_auto": resolve_fleet_mode("auto"),
+        "jax_version": jax.__version__,
+        "device_count": str(jax.device_count()),
+        "bench_small": str(int(SMALL)),
+    }
+
+
+def write_json(path: str, rows: List[Row], extra_meta: Dict | None = None
+               ) -> None:
+    """Emit ``{"meta": {...}, "rows": [{name, us_per_call, derived}]}``."""
+    meta = run_meta()
+    if extra_meta:
+        meta.update(extra_meta)
+    def _num(v: str):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                pass
+        return v
+
+    doc = {
+        "meta": meta,
+        "rows": [{"name": n, "us_per_call": us,
+                  "derived": {k: _num(v)
+                              for kv in d.split(";") if "=" in kv
+                              for k, v in [kv.split("=", 1)]}}
+                 for n, us, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

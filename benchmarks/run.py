@@ -1,64 +1,106 @@
 """Benchmark harness — one module per paper table/figure + systems benches.
 
-Prints ``name,us_per_call,derived`` CSV.  BENCH_SMALL=1 shrinks workloads
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes a structured report whose ``meta`` records the backend and the mode
+``run_fleet(mode="auto")`` resolves to on it (the data the ROADMAP's
+per-backend fleet-default item needs).  BENCH_SMALL=1 shrinks workloads
 (used by CI); the full run reproduces the paper's §VI comparison numbers.
 
-``--smoke`` runs one tiny engine episode per scheduler instead (seconds,
-used by CI to keep the perf entry points importable and runnable).
+``--smoke`` runs one tiny engine episode per scheduler plus a tiny
+streaming-service run instead (seconds, used by CI to keep the perf entry
+points importable and runnable).
 """
 import argparse
 import sys
 import traceback
 
 
-def smoke() -> int:
-    """One tiny device-resident episode per scheduler; fails loudly if any
-    perf entry point rots."""
+def smoke() -> tuple:
+    """One tiny device-resident episode per scheduler + one tiny service
+    run; fails loudly if any perf entry point rots."""
     from repro.core import (SCHEDULER_NAMES, SchedulerConfig, SimConfig,
                             generate_episode, run_episode)
-    from .common import time_fn
+    from repro.service import FlaasService, ServiceConfig, make_trace
+    from .common import derived, time_fn
 
     sim = SimConfig(n_devices=4, n_analysts=3, pipelines_per_analyst=6,
                     n_rounds=3)
     ep = generate_episode(sim)
     cfg = SchedulerConfig(beta=2.2)
     failures = 0
-    print("name,us_per_call,derived")
+    rows = []
     for name in SCHEDULER_NAMES:
         try:
             out = run_episode(ep, cfg, name)   # validates conservation
             us = time_fn(lambda e: run_episode(e, cfg, name), ep, iters=2)
-            print(f"smoke/engine_{name},{us:.1f},"
-                  f"n_allocated={int(out['n_allocated'].sum())}")
+            rows.append((f"smoke/engine_{name}", us, derived(
+                n_allocated=int(out["n_allocated"].sum()))))
         except Exception as e:
             traceback.print_exc()
             print(f"smoke/engine_{name},NaN,error={type(e).__name__}",
                   file=sys.stderr)
             failures += 1
-    return failures
+
+    # service_throughput smoke: a short streaming run with recycling +
+    # ledger-ring wrap on the smallest legal ring.
+    try:
+        trace = make_trace("paper_default", "poisson", seed=0, n_devices=4,
+                           pipelines_per_analyst=6)
+        svc_cfg = ServiceConfig(
+            scheduler="dpf", sched=cfg, analyst_slots=4, pipeline_slots=6,
+            block_slots=10 * trace.blocks_per_tick, chunk_ticks=4,
+            admit_batch=8, max_pending=32)
+        summary = FlaasService(svc_cfg, trace).run(12)
+        rows.append(("smoke/service_dpf",
+                     summary["wall_seconds"] * 1e6 / summary["ticks"],
+                     derived(ticks_per_s=round(summary["ticks_per_second"], 1),
+                             admitted=summary["admission"]["admitted"],
+                             allocated=summary["total_allocated"])))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/service_dpf,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+    return failures, rows
 
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
-                        help="tiny engine episode per scheduler, then exit")
+                        help="tiny engine episode per scheduler + tiny "
+                             "service run, then exit")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write a structured JSON report (meta: "
+                             "backend, resolved auto fleet mode, ...)")
     args = parser.parse_args()
+
+    from .common import emit, write_json
+
     if args.smoke:
-        sys.exit(1 if smoke() else 0)
+        failures, rows = smoke()
+        print("name,us_per_call,derived")
+        emit(rows)
+        if args.json:
+            write_json(args.json, rows, extra_meta={"smoke": "1"})
+        sys.exit(1 if failures else 0)
 
     from . import (bench_fig2, bench_fig4_5, bench_fig6, bench_kernels,
-                   bench_scheduler_scale, bench_train_step)
-    from .common import emit
+                   bench_scheduler_scale, bench_service, bench_train_step)
 
+    all_rows = []
     print("name,us_per_call,derived")
     for mod in (bench_fig2, bench_fig4_5, bench_fig6, bench_scheduler_scale,
-                bench_kernels, bench_train_step):
+                bench_service, bench_kernels, bench_train_step):
         try:
-            emit(mod.run())
+            rows = mod.run()
+            emit(rows)
+            all_rows.extend(rows)
         except Exception as e:  # keep the harness alive per-table
             traceback.print_exc()
             print(f"{mod.__name__},NaN,error={type(e).__name__}",
                   file=sys.stderr)
+    if args.json:
+        write_json(args.json, all_rows)
 
 
 if __name__ == "__main__":

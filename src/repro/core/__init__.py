@@ -11,8 +11,8 @@ from .scheduler import RoundResult, SchedulerConfig, schedule_round
 from .baselines import dpf_round, dpk_round, fcfs_round
 from .registry import (SCHEDULER_NAMES, SCHEDULERS, get_round_fn,
                        get_scheduler)
-from .engine import (Episode, generate_episode, run_episode, run_fleet,
-                     stack_episodes)
+from .engine import (Episode, generate_episode, resolve_fleet_mode,
+                     run_episode, run_fleet, stack_episodes)
 from .scenarios import (SCENARIOS, get_scenario, make_fleet,
                         make_scenario_grid, scenario_config)
 from .simulation import FlaasSimulator, SimConfig, run_simulation
@@ -26,8 +26,8 @@ __all__ = [
     "pack_all", "pack_analyst", "RoundResult", "SchedulerConfig",
     "schedule_round", "dpf_round", "dpk_round", "fcfs_round",
     "SCHEDULER_NAMES", "SCHEDULERS", "get_round_fn", "get_scheduler",
-    "Episode", "generate_episode", "run_episode", "run_fleet",
-    "stack_episodes", "SCENARIOS", "get_scenario", "make_fleet",
+    "Episode", "generate_episode", "resolve_fleet_mode", "run_episode",
+    "run_fleet", "stack_episodes", "SCENARIOS", "get_scenario", "make_fleet",
     "make_scenario_grid", "scenario_config", "FlaasSimulator", "SimConfig",
     "run_simulation",
 ]

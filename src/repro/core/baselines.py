@@ -59,7 +59,8 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn):
 
     view = dm.AnalystView.build(
         dm.RoundInputs(rnd.demand, active, rnd.arrival, rnd.loss,
-                       rnd.capacity, rnd.budget_total, rnd.now), cfg.tau)
+                       rnd.capacity, rnd.budget_total, rnd.now), cfg.tau,
+        cfg.use_pallas)
     realized = jnp.sum(gamma * x_ij[..., None], axis=1)
     mu_real = jnp.max(realized, axis=-1)
     util = mu_real * view.a_i * view.mask

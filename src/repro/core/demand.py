@@ -17,6 +17,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from . import hotpath
+
 Array = jax.Array
 
 _EPS = 1e-12
@@ -66,9 +68,12 @@ def analyst_demand(gamma: Array, active: Array) -> Array:
     return jnp.sum(gamma * active[..., None], axis=1)
 
 
-def analyst_max_share(gamma_i: Array) -> Array:
-    """mu_i = max_k gamma_i^<k>  (Eq. 4).  [M]."""
-    return jnp.max(gamma_i, axis=-1)
+def analyst_max_share(gamma_i: Array, use_pallas: bool = False) -> Array:
+    """mu_i = max_k gamma_i^<k>  (Eq. 4).  [M].
+
+    ``use_pallas`` routes the row-max through the Pallas budget kernel
+    (production-scale [M, K] sweep; see :mod:`repro.core.hotpath`)."""
+    return hotpath.rowmax(gamma_i, use_pallas)
 
 
 def waiting_coefficient(arrival: Array, now: Array, tau: float) -> Array:
@@ -105,11 +110,12 @@ class AnalystView:
     mask: Array      # [M]    analyst has any active demand
 
     @classmethod
-    def build(cls, rnd: RoundInputs, tau: float) -> "AnalystView":
+    def build(cls, rnd: RoundInputs, tau: float,
+              use_pallas: bool = False) -> "AnalystView":
         gamma = normalized_demand(rnd.demand, rnd.budget_total)
         mu_ij = pipeline_max_share(gamma)
         g_i = analyst_demand(gamma, rnd.active)
-        mu_i = analyst_max_share(g_i)
+        mu_i = analyst_max_share(g_i, use_pallas)
         t_i = analyst_waiting(rnd.arrival, rnd.active, rnd.now)
         T_i = jnp.exp(-t_i / tau)
         l_i = analyst_loss(rnd.loss, mu_ij, rnd.active)

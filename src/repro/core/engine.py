@@ -187,7 +187,7 @@ def _episode_metrics(ep: Episode, cfg: SchedulerConfig, round_fn,
             cap_frac = capacity / jnp.maximum(budget_total, _EPS)
             unsat = infeasible_pipelines(gamma, cap_frac)
             sched_rnd = dataclasses.replace(rnd, active=active & ~unsat)
-            view = AnalystView.build(sched_rnd, cfg.tau)
+            view = AnalystView.build(sched_rnd, cfg.tau, cfg.use_pallas)
             out.update(
                 utility=res.utility,
                 analyst_mask=view.mask,
@@ -259,6 +259,19 @@ def run_episode(episode: Episode, sched_cfg: SchedulerConfig,
     return out
 
 
+def resolve_fleet_mode(mode: str = "auto") -> str:
+    """The concrete fleet execution mode ``run_fleet`` will use for
+    ``mode`` on the current backend ('map' on CPU, 'vmap' on accelerators).
+    Public so benchmarks/telemetry can *record* the resolved choice — the
+    ROADMAP item "pick per-backend fleet defaults from data" needs the
+    choice in the emitted data."""
+    if mode == "auto":
+        return "map" if jax.default_backend() == "cpu" else "vmap"
+    if mode not in ("vmap", "map"):
+        raise ValueError(f"unknown fleet mode {mode!r}; use 'vmap'/'map'/'auto'")
+    return mode
+
+
 def run_fleet(fleet: Episode, sched_cfg: SchedulerConfig,
               scheduler: str = "dpbalance", *, diagnostics: bool = False,
               validate: bool = True,
@@ -272,8 +285,7 @@ def run_fleet(fleet: Episode, sched_cfg: SchedulerConfig,
     — avoids batched gathers and lockstep while_loops), 'auto' picks by
     backend.
     """
-    if mode == "auto":
-        mode = "map" if jax.default_backend() == "cpu" else "vmap"
+    mode = resolve_fleet_mode(mode)
     out = _compiled_fleet(scheduler, sched_cfg, diagnostics, mode)(fleet)
     if validate:
         _check_conservation(out, scheduler)

@@ -1,0 +1,65 @@
+"""Kernel dispatch for the scheduler hot path.
+
+The two dense ``[M, K]`` sweeps that dominate production-scale rounds —
+the AnalystView dominant-share row-max and the waterfill dual-ascent
+matvecs — have Pallas kernels in :mod:`repro.kernels.budget_alloc`.  This
+module is the single switch between those kernels and the plain-jnp path:
+
+* ``use_pallas=False`` (default): pure jnp — XLA fuses these fine at paper
+  scale, and it is the fast path on CPU.
+* ``use_pallas=True``: the Pallas kernels, compiled on TPU and interpreted
+  elsewhere (interpret mode is slow but bit-faithful, which is what the
+  parity tests pin against ``kernels.ref``).
+
+Block sizes are the largest divisors of each dimension within the kernels'
+preferred tiles, so any shape dispatches without padding (a divisor of 1
+still runs — inefficient, never wrong).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``."""
+    for d in range(min(dim, target), 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rowmax(g: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """mu_i = max_k g_ik.  [M, K] -> [M]."""
+    if not use_pallas:
+        return jnp.max(g, axis=-1)
+    from repro.kernels.budget_alloc import rowmax as rowmax_kernel
+    M, K = g.shape
+    return rowmax_kernel(g, block_m=_pick_block(M, 256),
+                         block_k=_pick_block(K, 1024),
+                         interpret=_interpret())
+
+
+def matvec(c: jax.Array, v: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """y_i = sum_k c_ik v_k.  [M, K] x [K] -> [M]."""
+    if not use_pallas:
+        return c @ v
+    from repro.kernels.budget_alloc import matvec as matvec_kernel
+    M, K = c.shape
+    return matvec_kernel(c, v, block_m=_pick_block(M, 256),
+                         block_k=_pick_block(K, 1024),
+                         interpret=_interpret())
+
+
+def matvec_t(c: jax.Array, x: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """load_k = sum_i c_ik x_i  (transpose sweep).  [M, K] x [M] -> [K]."""
+    if not use_pallas:
+        return x @ c
+    return matvec(c.T, x, use_pallas=True)

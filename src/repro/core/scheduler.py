@@ -39,6 +39,8 @@ class SchedulerConfig:
     refine: bool = True             # SP2 single-swap refinement
     solver_iters: int = 4000
     solver_tol: float = 1e-6
+    use_pallas: bool = False        # [M,K] hot-path sweeps via Pallas kernels
+                                    # (compiled on TPU, interpret elsewhere)
 
     def effective_lambda(self) -> float:
         return ut.default_lambda(self.beta) if self.lam is None else self.lam
@@ -70,13 +72,14 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
     active = rnd.active & ~dm.infeasible_pipelines(gamma, cap_frac)
     rnd = dataclasses.replace(rnd, active=active)
 
-    view = dm.AnalystView.build(rnd, cfg.tau)
+    view = dm.AnalystView.build(rnd, cfg.tau, cfg.use_pallas)
 
     # SP1 — analyst-level alpha-fair allocation.
     c = view.gamma_i * (view.a_i[:, None] if cfg.weighted_constraints else 1.0)
     sp1 = alpha_fair_waterfill(
         view.mu_i, view.a_i, c, view.mask, cap=cap_frac,
-        beta=cfg.beta, max_iters=cfg.solver_iters, tol=cfg.solver_tol)
+        beta=cfg.beta, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+        use_pallas=cfg.use_pallas)
     budget_i = view.gamma_i * sp1.x[:, None]          # [M, K] granted vectors
 
     # SP2 — per-analyst packing (Alg.1 lines 3-7); per-pipeline weights

@@ -30,6 +30,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import hotpath
+
 _EPS = 1e-12
 
 
@@ -40,15 +42,16 @@ class WaterfillResult(NamedTuple):
     iters: jax.Array      # iterations executed
 
 
-def _x_of_lambda(lam, c, w_pow, beta, xcap, mask):
+def _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas=False):
     """x_i(lambda) from KKT stationarity, clipped to the per-analyst cap."""
-    denom = jnp.maximum(c @ lam, _EPS)           # [M]
+    denom = jnp.maximum(hotpath.matvec(c, lam, use_pallas), _EPS)   # [M]
     x = (w_pow / denom) ** (1.0 / beta)
     x = jnp.minimum(x, xcap)
     return jnp.where(mask, x, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "max_iters", "tol"))
+@functools.partial(jax.jit, static_argnames=("beta", "max_iters", "tol",
+                                             "use_pallas"))
 def alpha_fair_waterfill(
     mu: jax.Array,          # [M] analyst dominant-share coefficient
     a: jax.Array,           # [M] T(t_i) l_i weights
@@ -58,6 +61,7 @@ def alpha_fair_waterfill(
     beta: float = 2.2,
     max_iters: int = 4000,
     tol: float = 1e-6,
+    use_pallas: bool = False,   # route [M,K] sweeps through Pallas kernels
 ) -> WaterfillResult:
     """Solve SP1.  Returns ratios x_i >= 0 with sum_i c_ik x_i <= cap_k."""
     assert beta > 0, "alpha-fairness requires beta > 0"
@@ -83,8 +87,8 @@ def alpha_fair_waterfill(
 
     def body(state):
         lam, it, _ = state
-        x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask)
-        g = (x @ c - cap) / cap_safe             # [K] relative violation
+        x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas)
+        g = (hotpath.matvec_t(c, x, use_pallas) - cap) / cap_safe  # [K]
         eta = 0.5 / (1.0 + 0.001 * it)           # decaying multiplicative step
         lam_new = lam * jnp.exp(eta * g)
         lam_new = jnp.clip(lam_new, 1e-12, 1e12)
@@ -98,12 +102,13 @@ def alpha_fair_waterfill(
     lam, iters, _ = jax.lax.while_loop(
         cond, body, (lam0, jnp.array(0), jnp.array(jnp.inf, dtype=c.dtype))
     )
-    x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask)
+    x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas)
 
     # Final exact projection: uniform scale-down of any residual overshoot so
     # the output is *always* feasible (privacy budgets must never overdraw).
-    load = x @ c                                  # [K]
+    load = hotpath.matvec_t(c, x, use_pallas)     # [K]
     ratio = jnp.where(load > cap, cap_safe / jnp.maximum(load, _EPS), 1.0)
     x = x * jnp.min(ratio)
-    violation = jnp.max((jnp.maximum(x @ c - cap, 0.0)) / cap_safe)
+    violation = jnp.max(
+        jnp.maximum(hotpath.matvec_t(c, x, use_pallas) - cap, 0.0) / cap_safe)
     return WaterfillResult(x=x, lam=lam, violation=violation, iters=iters)

@@ -1,0 +1,29 @@
+"""Streaming FLaaS service plane — continuous admission, persistent block
+ledger, and load-driven scheduling layered on the episode engine.
+
+The engine (:mod:`repro.core.engine`) evaluates *pre-generated finite*
+episodes; this package turns the same per-round scheduling machinery into a
+long-running online system: unbounded arrival traces, a fixed-capacity
+device-resident state with slot recycling, batched admission with
+backpressure, a chunked ``lax.scan`` tick loop with host sync only at chunk
+boundaries, streaming telemetry, and a replay oracle that pins the service
+loop against ``engine.run_episode``.  See ``docs/service.md``.
+"""
+from .queue import AdmissionQueue, AdmissionStats
+from .replay import (PARITY_KEYS, collect_service_metrics, freeze_trace,
+                     replay_gap)
+from .server import FlaasService, ServiceConfig
+from .state import (NEVER, MintPlan, ServiceState, SlotTable, admit_batch,
+                    plan_mints)
+from .telemetry import StreamingTelemetry
+from .traces import (PATTERNS, ArrivalTrace, PrecomputedTrace, Submission,
+                     make_trace)
+
+__all__ = [
+    "AdmissionQueue", "AdmissionStats", "PARITY_KEYS",
+    "collect_service_metrics", "freeze_trace", "replay_gap", "FlaasService",
+    "ServiceConfig", "NEVER", "MintPlan", "ServiceState", "SlotTable",
+    "admit_batch", "plan_mints", "StreamingTelemetry", "PATTERNS",
+    "ArrivalTrace",
+    "PrecomputedTrace", "Submission", "make_trace",
+]

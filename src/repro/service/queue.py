@@ -1,0 +1,80 @@
+"""Batched admission with backpressure.
+
+Submissions accumulate host-side in a bounded FIFO; at every chunk boundary
+the server drains up to ``admit_batch`` of them into free slots of the
+:class:`~repro.service.state.SlotTable`.  Three outcomes per submission:
+
+* **admitted** — a row (and enough pipeline columns) was free;
+* **deferred** — the table is full or the analyst's row has no free
+  columns; the submission stays queued, FIFO order preserved (head-of-line
+  blocking is deliberate: skipping ahead would starve large batches);
+* **rejected** — the queue itself is full (``max_pending``); backpressure
+  is the only load-shedding mechanism, and the caller sees the count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Tuple
+
+from .state import SlotTable
+from .traces import Submission
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    offered: int = 0          # submissions handed to offer()
+    admitted: int = 0
+    rejected: int = 0         # dropped by backpressure
+    pipelines_admitted: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class AdmissionQueue:
+    """Bounded FIFO of pending submissions (host side)."""
+
+    def __init__(self, max_pending: int = 1024):
+        self.max_pending = max_pending
+        self.pending: deque = deque()
+        self.stats = AdmissionStats()
+
+    @property
+    def depth(self) -> int:
+        return len(self.pending)
+
+    def offer(self, subs: List[Submission]) -> int:
+        """Enqueue new submissions; returns how many were rejected."""
+        rejected = 0
+        for sub in subs:
+            self.stats.offered += 1
+            if len(self.pending) >= self.max_pending:
+                rejected += 1
+                self.stats.rejected += 1
+            else:
+                self.pending.append(sub)
+        return rejected
+
+    def drain(self, table: SlotTable,
+              admit_batch: int) -> List[Tuple[Submission, int, List[int]]]:
+        """Admit up to ``admit_batch`` queued submissions into free slots.
+
+        Returns ``(submission, row, cols)`` placements; the caller applies
+        them to device state (the server activates each at
+        ``max(submit_tick, boundary)``, so prefetched arrivals activate at
+        their arrival tick and deferred ones as soon as admitted).  Stops
+        at the first submission that does not fit (FIFO)."""
+        placements = []
+        while self.pending and len(placements) < admit_batch:
+            sub = self.pending[0]
+            placed = table.row_for(sub.analyst, sub.n_pipelines)
+            if placed is None:
+                break
+            row, cols = placed
+            table.commit(sub.analyst, row, cols, sub.submit_tick)
+            self.pending.popleft()
+            self.stats.admitted += 1
+            self.stats.pipelines_admitted += sub.n_pipelines
+            placements.append((sub, row, cols))
+        return placements

@@ -1,0 +1,343 @@
+"""The service tick loop: chunks of T ticks as one compiled scan.
+
+Layering on the PR-1 engine:
+
+* the per-tick body is the *engine's* round body (mint blocks -> build
+  ``RoundInputs`` -> dispatch through ``registry.get_round_fn`` -> debit
+  capacity, mark grants) lifted onto persistent :class:`ServiceState`
+  instead of a pre-generated ``Episode``;
+* ``chunk_ticks`` consecutive ticks run as a single ``jax.lax.scan`` inside
+  one jit program — the host touches device state **only at chunk
+  boundaries**, where it drains the admission queue into recycled slots,
+  plans the chunk's block mints, and folds telemetry;
+* admissions are *prefetched*: the server polls the trace for the whole
+  upcoming chunk at the boundary, and each admitted pipeline activates
+  mid-chunk at its own ``spawn_tick`` — the same mechanism as the engine's
+  ``spawn_round``, which is what makes a frozen trace replay bit-compatible
+  with :func:`repro.core.engine.run_episode` (see
+  :mod:`repro.service.replay`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import utility as ut
+from repro.core.demand import RoundInputs
+from repro.core.registry import get_round_fn
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulation import ROUND_SECONDS
+
+from .queue import AdmissionQueue
+from .state import ServiceState, SlotTable, admit_batch, plan_mints
+from .telemetry import StreamingTelemetry
+from .traces import ArrivalTrace, demand_window_ticks
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    scheduler: str = "dpbalance"
+    sched: SchedulerConfig = SchedulerConfig()
+    analyst_slots: int = 8         # M rows in the slot table
+    pipeline_slots: int = 32       # N columns per row
+    block_slots: int = 4096        # B ledger ring slots
+    chunk_ticks: int = 8           # T — scan length per host round-trip
+    admit_batch: int = 32          # max submissions admitted per boundary
+    max_pending: int = 1024        # queue bound (backpressure beyond this)
+    validate: bool = True          # host-checks conservation per chunk
+    latency_reservoir: int = 100_000
+
+
+def _chunk_metrics(state: ServiceState, mint_ops, *,
+                   cfg: SchedulerConfig, round_fn, n_ticks: int,
+                   retire: bool):
+    """Traceable: run ``n_ticks`` service ticks in one ``lax.scan``.
+
+    Mirrors ``engine._episode_metrics`` tick-for-tick so a wrap-free ledger
+    over an episode-compatible trace is bit-identical to ``run_episode``.
+
+    Two statically-selected bodies (see :class:`~repro.service.state.MintPlan`):
+
+    * wrap-free (``retire=False``): ``mint_ops = (mint_add, budget_total,
+      created)`` precomputed rows; carry is ``(done, capacity)`` and the
+      mint is ``capacity += mint_add`` — **op-for-op the engine's round
+      body**, so a service tick costs an engine round.
+    * wrap (``retire=True``): ``mint_ops = (mask, budgets, budget_total,
+      created)``; minted slots *evict* their previous block (capacity set,
+      not added; demand column zeroed), and demand joins the carry.
+    """
+    f32 = state.demand.dtype
+    ticks = state.tick + jnp.arange(n_ticks, dtype=jnp.int32)
+
+    def tick_out(demand, pending, capacity, budget_total, created, t):
+        """Shared per-tick round + metrics, both mint modes."""
+        now = t.astype(f32) * ROUND_SECONDS
+        rnd = RoundInputs(
+            demand=demand * pending[..., None].astype(f32),
+            active=pending,
+            arrival=jnp.where(pending, state.arrival, 0.0),
+            loss=jnp.where(pending, state.loss, 1.0),
+            capacity=capacity, budget_total=budget_total, now=now)
+        res = round_fn(rnd, cfg)
+        mask = jnp.sum(pending, axis=1) > 0
+        out = {
+            "round_efficiency": res.efficiency,
+            "round_fairness": res.fairness,
+            "round_fairness_norm": ut.normalized_fairness(
+                res.utility, cfg.beta, mask),
+            "round_jain": res.jain,
+            "n_allocated": res.n_allocated,
+            "leftover": jnp.sum(res.leftover),
+            "conservation_gap": jnp.max(jnp.abs(
+                jnp.where(created, capacity - res.consumed - res.leftover,
+                          0.0))),
+            "overdraw": jnp.max(res.consumed - capacity),
+            "selected": res.selected,
+        }
+        return res, out
+
+    def body(carry, xs):
+        if retire:  # ring wrapped: minted slots evict their previous block
+            demand, done, capacity = carry
+            minted, budgets, budget_total, created, t = xs
+            # Wipe a minted slot's demand column only for pipelines that
+            # were submitted BEFORE this tick — their entries referenced
+            # the evicted block.  A pipeline spawning at exactly this tick
+            # demands the block being minted now (prefetched admission
+            # wrote it at the boundary), so its demand must survive.
+            stale = minted[None, None, :] & (state.spawn_tick < t)[..., None]
+            demand = jnp.where(stale, 0.0, demand)
+            capacity = jnp.where(minted, budgets, capacity)
+        else:       # wrap-free: demand is a scan constant, mint is an add
+            done, capacity = carry
+            mint_add, budget_total, created, t = xs
+            demand = state.demand
+            capacity = capacity + mint_add
+        pending = (state.spawn_tick <= t) & ~done
+        if retire:
+            # A long-pending pipeline can outlive its every demanded block
+            # (all retired).  Zero demand must not read as "trivially
+            # grantable" — greedy_cover would hand it a phantom zero-budget
+            # grant.  It *expires* instead: completed with nothing, slot
+            # recycled at the boundary, counted separately in telemetry.
+            has_demand = jnp.any(demand > 0.0, axis=-1)
+            expired = pending & ~has_demand
+            pending = pending & has_demand
+        res, out = tick_out(demand, pending, capacity, budget_total,
+                            created, t)
+        capacity = jnp.maximum(capacity - res.consumed, 0.0)
+        done = done | res.selected
+        if retire:
+            done = done | expired
+            out["expired"] = expired
+        new_carry = (demand, done, capacity) if retire else (done, capacity)
+        return new_carry, out
+
+    init = (state.done, state.block_capacity)
+    if retire:
+        init = (state.demand,) + init
+    final, ys = jax.lax.scan(body, init, mint_ops + (ticks,))
+    # Return only what changed: echoing the (unchanged) demand through the
+    # jit in wrap-free mode would force XLA to copy the [M, N, B] buffer
+    # into a fresh output every chunk — the host grafts the carries back
+    # onto the state instead (see FlaasService._after_chunk).
+    return final, ys
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
+                    retire: bool):
+    round_fn = get_round_fn(scheduler)
+    return jax.jit(functools.partial(
+        _chunk_metrics, cfg=cfg, round_fn=round_fn, n_ticks=n_ticks,
+        retire=retire))
+
+
+class FlaasService:
+    """Long-running scheduling service over an :class:`ArrivalTrace`."""
+
+    def __init__(self, cfg: ServiceConfig, trace: ArrivalTrace):
+        if trace.sim.pipelines_per_analyst > cfg.pipeline_slots:
+            raise ValueError(
+                f"trace submits {trace.sim.pipelines_per_analyst} pipelines "
+                f"per analyst but rows have {cfg.pipeline_slots} slots")
+        window_ticks = demand_window_ticks(trace.blocks_per_device)
+        window = window_ticks * trace.blocks_per_tick
+        if cfg.block_slots < window:
+            raise ValueError(
+                f"block ring ({cfg.block_slots}) smaller than the deepest "
+                f"demand window ({window} blocks = {window_ticks} "
+                f"ticks x {trace.blocks_per_tick} blocks/tick)")
+        self.cfg = cfg
+        self.trace = trace
+        self.state = ServiceState.create(cfg.analyst_slots,
+                                         cfg.pipeline_slots, cfg.block_slots)
+        self.table = SlotTable(cfg.analyst_slots, cfg.pipeline_slots)
+        self.queue = AdmissionQueue(cfg.max_pending)
+        self.telemetry = StreamingTelemetry(cfg.latency_reservoir,
+                                            seed=trace.seed)
+        # host mirrors of the ledger metadata (MintPlan precomputes the
+        # per-tick budget_total/created rows from these, which is what
+        # keeps the wrap-free scan body engine-identical)
+        self._ledger_budget = np.ones(cfg.block_slots, np.float32)
+        self._ledger_birth = np.full(cfg.block_slots, -1, np.int32)
+        self._wall = 0.0
+
+    # ------------------------------------------------------------ boundary
+    def admit_boundary(self, n_ticks: int) -> int:
+        """The host half of a chunk boundary: poll the trace across the
+        upcoming ``n_ticks``, enqueue with backpressure, drain one
+        admission batch into recycled slots.  Returns the chunk's first
+        tick."""
+        tick0 = int(self.state.tick)
+        events = []
+        for t in range(tick0, tick0 + n_ticks):
+            events.extend(self.trace.step(t))
+        self.queue.offer(events)
+        placements = self.queue.drain(self.table, self.cfg.admit_batch)
+        if placements:
+            self.state = admit_batch(self.state,
+                                     *self._placement_arrays(placements,
+                                                             tick0))
+        self.telemetry.observe_boundary(self.queue.depth)
+        return tick0
+
+    def _plan_chunk(self, tick0: int, n_ticks: int):
+        """(plan, device mint_ops, compiled step) for the upcoming chunk."""
+        plan = plan_mints(tick0, n_ticks, self.cfg.block_slots,
+                          self.trace.device_budget,
+                          self.trace.blocks_per_device,
+                          self._ledger_budget, self._ledger_birth)
+        if plan.retire:
+            ops = (jnp.asarray(plan.mask), jnp.asarray(plan.budgets),
+                   jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
+        else:   # budgets rows double as the capacity-add operand
+            ops = (jnp.asarray(plan.budgets),
+                   jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
+        step = _compiled_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
+                               plan.retire)
+        return plan, ops, step
+
+    def tick_loop_fn(self, n_ticks: int):
+        """The pure compiled tick loop for the upcoming chunk, as a
+        zero-argument callable that does NOT advance state.  This is the
+        benchmark hook that isolates the device scan from boundary work —
+        symmetric with engine rounds/sec excluding ``generate_episode``."""
+        _, ops, step = self._plan_chunk(int(self.state.tick), n_ticks)
+        state = self.state
+        return lambda: step(state, ops)
+
+    # ----------------------------------------------------------- chunk step
+    def run_chunk(self, n_ticks: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """One boundary-to-boundary step: poll/admit, scan, recycle."""
+        T = self.cfg.chunk_ticks if n_ticks is None else n_ticks
+        t0 = time.perf_counter()
+        tick0 = self.admit_boundary(T)
+
+        # plan this chunk's block mints; run the compiled scan; graft the
+        # changed carries + ledger-metadata mirrors back onto the state.
+        plan, ops, step = self._plan_chunk(tick0, T)
+        final, ys = step(self.state, ops)
+        self._ledger_budget = plan.next_budget
+        self._ledger_birth = plan.next_birth
+        self.state = dataclasses.replace(
+            self.state,
+            demand=final[0] if plan.retire else self.state.demand,
+            done=final[-2], block_capacity=final[-1],
+            block_budget=jnp.asarray(plan.next_budget),
+            block_birth=jnp.asarray(plan.next_birth),
+            tick=jnp.asarray(tick0 + T, jnp.int32))
+        ys = {k: np.asarray(v) for k, v in ys.items()}
+        if self.cfg.validate:
+            self._check_conservation(ys)
+
+        # 4. recycle granted + expired slots, record grant latencies,
+        #    fold telemetry.
+        selected = ys.pop("selected")                      # [T, M, N]
+        expired = ys.pop("expired", None)
+        done_now = selected.any(axis=0)
+        if done_now.any():
+            grant_tick = tick0 + np.argmax(selected, axis=0)
+            lat = grant_tick[done_now] - self.table.submit_tick[done_now]
+            self.telemetry.observe_latencies(lat)
+        release = done_now
+        if expired is not None and expired.any():
+            expired_now = expired.any(axis=0)
+            self.telemetry.observe_expired(
+                int((expired_now & self.table.occupied).sum()))
+            release = release | expired_now
+        self.table.release_done(release)
+        self.telemetry.observe_chunk(ys)
+        self._wall += time.perf_counter() - t0
+        return ys
+
+    # ------------------------------------------------------------ main loop
+    def run(self, n_ticks: int) -> Dict:
+        """Run ``n_ticks`` service ticks; returns the telemetry summary."""
+        end = int(self.state.tick) + n_ticks
+        while int(self.state.tick) < end:
+            self.run_chunk(min(self.cfg.chunk_ticks,
+                               end - int(self.state.tick)))
+        return self.summary()
+
+    def summary(self) -> Dict:
+        return self.telemetry.summary(admission=self.queue.stats.snapshot(),
+                                      wall_seconds=self._wall)
+
+    # -------------------------------------------------------------- helpers
+    def _placement_arrays(self, placements, boundary_tick: int):
+        """Operands for one admission batch: ``[M, N]`` slot-metadata
+        tables + flat COO demand triples (see
+        :func:`repro.service.state.admit_batch`)."""
+        M, N = self.cfg.analyst_slots, self.cfg.pipeline_slots
+        B = self.cfg.block_slots
+        mask = np.zeros((M, N), bool)
+        loss = np.zeros((M, N), np.float32)
+        arr_s = np.zeros((M, N), np.float32)
+        spawn = np.zeros((M, N), np.int32)
+        bpr = self.trace.blocks_per_tick
+        rows, cols, bids, eps = [], [], [], []
+        for sub, row, cs in placements:
+            spawn_tick = max(sub.submit_tick, boundary_tick)
+            arrival = self.trace.arrival_seconds(sub.submit_tick)
+            for j, c in enumerate(cs):
+                mask[row, c] = True
+                loss[row, c] = sub.loss[j]
+                arr_s[row, c] = arrival
+                spawn[row, c] = spawn_tick
+                # A submission deferred across a ring wrap may demand
+                # blocks that have been (or are about to be) evicted;
+                # their slots now/soon belong to newer blocks.  Writing
+                # `bid % B` blindly would alias that stale demand onto
+                # blocks the pipeline never asked for — drop it instead.
+                # Keep an entry only if (1) its block has not already been
+                # evicted (slot occupant's birth <= the bid's mint tick)
+                # and (2) the block outlives the pipeline's activation
+                # (its successor `bid + B` mints strictly after
+                # spawn_tick; evictions after activation are handled by
+                # the in-scan stale wipe, which is strict in spawn_tick).
+                slots = sub.bids[j] % B
+                keep = ((self._ledger_birth[slots] <= sub.bids[j] // bpr) &
+                        ((sub.bids[j] + B) // bpr > spawn_tick))
+                rows.append(np.full(int(keep.sum()), row, np.int64))
+                cols.append(np.full(int(keep.sum()), c, np.int64))
+                bids.append(slots[keep])
+                eps.append(sub.eps[j][keep])
+        return (mask, loss, arr_s, spawn, np.concatenate(rows),
+                np.concatenate(cols), np.concatenate(bids),
+                np.concatenate(eps))
+
+    def _check_conservation(self, ys) -> None:
+        gap = float(np.max(ys["conservation_gap"]))
+        over = float(np.max(ys["overdraw"]))
+        if gap > 1e-4 or over > 1e-4:
+            raise AssertionError(
+                f"budget conservation violated under "
+                f"{self.cfg.scheduler!r} at tick {int(self.state.tick)}: "
+                f"gap={gap:.3e} overdraw={over:.3e}")

@@ -1,0 +1,245 @@
+"""Persistent service-plane state: block ledger + pipeline slot table.
+
+The engine's :class:`~repro.core.engine.Episode` is immutable and finite —
+every block and pipeline the episode will ever see is pre-generated.  The
+service plane instead runs *forever* over fixed-size device arrays:
+
+* **Block ledger** (``block_budget`` / ``block_capacity`` / ``block_birth``,
+  all ``[B]``): a ring over global block ids.  Block ``bid`` lives in slot
+  ``bid % B``; when the ring wraps, minting a new block *retires* the slot's
+  previous occupant (its leftover budget is abandoned and any pipeline
+  demand still pointing at the slot is zeroed).  Slots that have never held
+  a block carry the engine's pre-creation sentinel (budget 1, capacity 0,
+  birth ``-1``) so a fresh ledger is bit-identical to an episode prefix.
+* **Pipeline slot table** (``demand[M, N, B]`` + per-pipeline metadata):
+  fixed ``M`` analyst rows x ``N`` pipeline columns.  A slot is *recycled*
+  (host free-list, :class:`SlotTable`) once its pipeline is granted;
+  admission overwrites the slot's demand row in full, so no stale demand
+  survives recycling.  ``spawn_tick`` activates a pipeline mid-chunk
+  (admission happens at chunk boundaries, activation at the pipeline's
+  arrival tick — the same mechanism as the engine's ``spawn_round``).
+
+Everything in :class:`ServiceState` is a device array; the host only reads
+or writes it at chunk boundaries (see :mod:`repro.service.server`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEVER = np.int32(np.iinfo(np.int32).max)   # spawn_tick sentinel: not admitted
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceState:
+    """Device-resident scheduling state that survives across ticks."""
+
+    demand: jax.Array          # [M, N, B] epsilon demand per pipeline slot
+    arrival: jax.Array         # [M, N] submission time (seconds)
+    loss: jax.Array            # [M, N] matching degree l_ij
+    spawn_tick: jax.Array      # [M, N] i32 tick the pipeline activates
+    done: jax.Array            # [M, N] bool — granted (slot awaiting recycle)
+    block_budget: jax.Array    # [B] total budget (1.0 pre-creation sentinel)
+    block_capacity: jax.Array  # [B] remaining budget (0 pre-creation)
+    block_birth: jax.Array     # [B] i32 mint tick (-1 pre-creation)
+    tick: jax.Array            # scalar i32 — next tick the server will run
+
+    @property
+    def shape(self):
+        return self.demand.shape
+
+    @classmethod
+    def create(cls, analyst_slots: int, pipeline_slots: int,
+               block_slots: int) -> "ServiceState":
+        M, N, B = analyst_slots, pipeline_slots, block_slots
+        return cls(
+            demand=jnp.zeros((M, N, B), jnp.float32),
+            arrival=jnp.zeros((M, N), jnp.float32),
+            loss=jnp.ones((M, N), jnp.float32),
+            spawn_tick=jnp.full((M, N), NEVER, jnp.int32),
+            done=jnp.zeros((M, N), bool),
+            block_budget=jnp.ones((B,), jnp.float32),
+            block_capacity=jnp.zeros((B,), jnp.float32),
+            block_birth=jnp.full((B,), -1, jnp.int32),
+            tick=jnp.asarray(0, jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    ServiceState,
+    data_fields=["demand", "arrival", "loss", "spawn_tick", "done",
+                 "block_budget", "block_capacity", "block_birth", "tick"],
+    meta_fields=[])
+
+
+@jax.jit
+def _admit_apply(state: ServiceState, mask, loss, arrival_seconds,
+                 spawn_ticks, rows, cols, bids, eps) -> ServiceState:
+    # wipe every (re)filled slot's demand row, then write the new demands
+    # as one small COO scatter — no stale demand survives recycling, and
+    # nothing proportional to [M, N, B] crosses the host boundary.
+    demand = jnp.where(mask[..., None], 0.0, state.demand)
+    demand = demand.at[rows, cols, bids].set(eps)
+    return dataclasses.replace(
+        state,
+        demand=demand,
+        loss=jnp.where(mask, loss, state.loss),
+        arrival=jnp.where(mask, arrival_seconds, state.arrival),
+        spawn_tick=jnp.where(mask, spawn_ticks, state.spawn_tick),
+        done=state.done & ~mask)
+
+
+def admit_batch(state: ServiceState, mask, loss, arrival_seconds,
+                spawn_ticks, rows, cols, bids, eps) -> ServiceState:
+    """Write one admission batch into the slot table (one fused jit'd
+    update; host calls this only at chunk boundaries).
+
+    ``mask[M, N]`` marks the slots being (re)filled; ``loss`` /
+    ``arrival_seconds`` / ``spawn_ticks`` are full-table arrays whose
+    values matter only under the mask.  The demand update arrives as flat
+    COO triples ``(rows, cols, bids) -> eps`` — kilobytes per boundary
+    instead of an [M, N, B] dense block.  The COO arrays are padded to the
+    next power of two with duplicates of entry 0 (same index, same value —
+    an idempotent write) so the jit cache stays logarithmic in batch
+    size."""
+    n = len(rows)
+    if n:
+        pad = (1 << max(n - 1, 0).bit_length()) - n
+        idx = np.concatenate([np.arange(n), np.zeros(pad, np.int64)])
+    else:  # every demand entry was dropped as stale — metadata-only admit
+        idx = np.zeros(0, np.int64)
+    return _admit_apply(
+        state, jnp.asarray(mask), jnp.asarray(loss, jnp.float32),
+        jnp.asarray(arrival_seconds, jnp.float32),
+        jnp.asarray(spawn_ticks, jnp.int32),
+        jnp.asarray(np.asarray(rows)[idx], jnp.int32),
+        jnp.asarray(np.asarray(cols)[idx], jnp.int32),
+        jnp.asarray(np.asarray(bids)[idx], jnp.int32),
+        jnp.asarray(np.asarray(eps, np.float32)[idx]))
+
+
+@dataclasses.dataclass
+class MintPlan:
+    """One chunk's block-mint schedule, fully precomputed on the host so
+    the device scan applies it with engine-identical ops.
+
+    ``retire`` says whether any minted slot overwrites a live block (ring
+    wrapped).  The wrap-free scan consumes ``budgets`` as a capacity *add*
+    (fresh slots hold 0, so ``capacity += budgets`` is the engine's own
+    mint op) plus ``budget_total``/``created`` directly, carrying only
+    ``(done, capacity)`` — a service tick is then op-for-op an engine
+    round.  Wrap chunks apply ``mask``/``budgets`` as selects (eviction =
+    set, not add) and carry demand through the scan.  ``next_*`` are the
+    host mirrors of the ledger metadata after the chunk."""
+
+    mask: np.ndarray          # [T, B] bool — minted this tick
+    budgets: np.ndarray       # [T, B] f32 — minted budget (0 elsewhere)
+    budget_total: np.ndarray  # [T, B] f32 — ledger budget_total at tick t
+    created: np.ndarray       # [T, B] bool — slot holds a block at tick t
+    retire: bool
+    next_budget: np.ndarray   # [B] f32 host mirror after the chunk
+    next_birth: np.ndarray    # [B] i32 host mirror after the chunk
+
+
+def plan_mints(tick0: int, n_ticks: int, block_slots: int,
+               device_budget: np.ndarray, blocks_per_device: int,
+               prev_budget: np.ndarray, prev_birth: np.ndarray) -> MintPlan:
+    """Mint schedule for ticks ``[tick0, tick0 + n_ticks)``; ``prev_*``
+    are the host ledger mirrors at the chunk boundary."""
+    n_devices = device_budget.shape[0]
+    bpr = n_devices * blocks_per_device
+    B = block_slots
+    ticks = np.arange(tick0, tick0 + n_ticks, dtype=np.int64)
+    bids = ticks[:, None] * bpr + np.arange(bpr)[None, :]      # global ids
+    slots = (bids % B).astype(np.int64)
+    rows = np.repeat(np.arange(n_ticks), bpr)
+    flat = slots.reshape(-1)
+    per_tick = np.tile(
+        np.repeat(device_budget.astype(np.float32), blocks_per_device),
+        n_ticks)
+    mask = np.zeros((n_ticks, B), bool)
+    mask[rows, flat] = True
+    budgets = np.zeros((n_ticks, B), np.float32)
+    budgets[rows, flat] = per_tick
+
+    budget_total = np.empty((n_ticks, B), np.float32)
+    created = np.empty((n_ticks, B), bool)
+    bud, birth = prev_budget.copy(), prev_birth.copy()
+    for i in range(n_ticks):
+        bud[slots[i]] = budgets[i, slots[i]]
+        birth[slots[i]] = tick0 + i
+        created[i] = birth >= 0
+        budget_total[i] = np.where(created[i], bud, 1.0)
+    return MintPlan(mask=mask, budgets=budgets, budget_total=budget_total,
+                    created=created, retire=bool(bids.max() >= B),
+                    next_budget=bud, next_birth=birth)
+
+
+class SlotTable:
+    """Host-side occupancy bookkeeping with free-list recycling.
+
+    Analyst rows are handed out from an ascending free list; pipeline
+    columns within a row are recycled as their pipelines complete.  A row
+    returns to the free list when its last occupied slot is released — an
+    analyst whose submissions are still queued at that moment gets a
+    (possibly different) row when they drain; only analysts with a
+    currently-occupied row keep their identity pinned to it."""
+
+    def __init__(self, analyst_slots: int, pipeline_slots: int):
+        self.M, self.N = analyst_slots, pipeline_slots
+        self.occupied = np.zeros((self.M, self.N), bool)
+        self.row_owner = np.full(self.M, -1, np.int64)   # external analyst id
+        self.submit_tick = np.full((self.M, self.N), -1, np.int64)
+        self._free_rows: List[int] = list(range(self.M - 1, -1, -1))
+
+    # ------------------------------------------------------------- queries
+    def free_pipeline_slots(self) -> int:
+        return int((~self.occupied).sum())
+
+    def live_rows(self) -> int:
+        return self.M - len(self._free_rows)
+
+    def row_for(self, analyst: int, n_pipes: int):
+        """Row + free columns for an admission of ``n_pipes`` pipelines by
+        ``analyst``, or None if it cannot be placed right now.
+
+        Prefers the analyst's existing row (returning analysts keep their
+        SP1 identity — one row per live analyst); otherwise pops a fresh
+        row off the free list."""
+        owned = np.where(self.row_owner == analyst)[0]
+        if owned.size:
+            row = int(owned[0])
+            cols = np.where(~self.occupied[row])[0]
+            if cols.size >= n_pipes:
+                return row, cols[:n_pipes].tolist()
+            return None                     # row full — defer
+        if not self._free_rows:
+            return None                     # table full — defer
+        row = self._free_rows[-1]           # peek; commit() pops
+        return row, list(range(n_pipes))
+
+    # ------------------------------------------------------------ mutation
+    def commit(self, analyst: int, row: int, cols, submit_tick: int) -> None:
+        if self.row_owner[row] == -1:
+            popped = self._free_rows.pop()
+            assert popped == row, "row_for/commit interleaving bug"
+            self.row_owner[row] = analyst
+        self.occupied[row, cols] = True
+        self.submit_tick[row, cols] = submit_tick
+
+    def release_done(self, done: np.ndarray) -> np.ndarray:
+        """Recycle slots whose pipelines were granted (``done[M, N]`` from
+        the device).  Returns the ``[n, 2]`` (row, col) indices freed this
+        call.  Rows with no remaining occupancy go back to the free list."""
+        freed = np.argwhere(done & self.occupied)
+        self.occupied[done] = False
+        self.submit_tick[done] = -1
+        for row in np.unique(freed[:, 0]) if freed.size else []:
+            row = int(row)
+            if not self.occupied[row].any() and self.row_owner[row] != -1:
+                self.row_owner[row] = -1
+                self._free_rows.append(row)
+        return freed

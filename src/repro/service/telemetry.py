@@ -1,0 +1,120 @@
+"""Streaming service telemetry.
+
+The engine returns whole-episode metric arrays; a long-running service
+cannot hold per-tick history forever.  :class:`StreamingTelemetry` folds
+each chunk's device outputs into O(1) cumulative aggregates (efficiency /
+fairness / allocation counts), tracks admission and queue-depth statistics
+from the host side, and keeps grant latencies in a bounded reservoir so
+percentiles stay estimable over unbounded streams.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+class _Reservoir:
+    """Classic reservoir sample of a scalar stream (Vitter's algorithm R)."""
+
+    def __init__(self, capacity: int, seed: int = 0):
+        self.capacity = capacity
+        self.buf = np.empty(capacity, np.float64)
+        self.n_seen = 0
+        self.rng = np.random.default_rng(seed)
+
+    def add(self, values: np.ndarray) -> None:
+        for v in np.asarray(values, np.float64).ravel():
+            if self.n_seen < self.capacity:
+                self.buf[self.n_seen] = v
+            else:
+                j = int(self.rng.integers(self.n_seen + 1))
+                if j < self.capacity:
+                    self.buf[j] = v
+            self.n_seen += 1
+
+    def percentiles(self, qs) -> Dict[str, float]:
+        if self.n_seen == 0:
+            return {f"p{q}": float("nan") for q in qs}
+        data = self.buf[: min(self.n_seen, self.capacity)]
+        return {f"p{q}": float(np.percentile(data, q)) for q in qs}
+
+
+class StreamingTelemetry:
+    """Cumulative service metrics; everything here is host-side numpy."""
+
+    def __init__(self, latency_reservoir: int = 100_000, seed: int = 0):
+        self.ticks = 0
+        self.cumulative_efficiency = 0.0
+        self.cumulative_fairness = 0.0
+        self.cumulative_fairness_norm = 0.0
+        self.total_allocated = 0
+        self.total_leftover = 0.0
+        self._jain_sum = 0.0
+        self._queue_depth_sum = 0
+        self._queue_depth_max = 0
+        self._boundaries = 0
+        self._latency = _Reservoir(latency_reservoir, seed)
+        self.grants = 0
+        self.expired_pipelines = 0   # outlived every demanded block
+
+    # ------------------------------------------------------------- updates
+    def observe_chunk(self, ys: Dict[str, np.ndarray]) -> None:
+        """Fold one chunk's per-tick device outputs into the aggregates."""
+        self.ticks += int(np.asarray(ys["round_efficiency"]).shape[0])
+        self.cumulative_efficiency += float(np.sum(ys["round_efficiency"]))
+        self.cumulative_fairness += float(np.sum(ys["round_fairness"]))
+        self.cumulative_fairness_norm += float(
+            np.sum(ys["round_fairness_norm"]))
+        self.total_allocated += int(np.sum(ys["n_allocated"]))
+        self.total_leftover = float(np.asarray(ys["leftover"])[-1])
+        self._jain_sum += float(np.sum(ys["round_jain"]))
+
+    def observe_boundary(self, queue_depth: int) -> None:
+        self._boundaries += 1
+        self._queue_depth_sum += queue_depth
+        self._queue_depth_max = max(self._queue_depth_max, queue_depth)
+
+    def observe_expired(self, n: int) -> None:
+        """Pipelines completed-with-nothing because every block they
+        demanded was retired from the ledger ring before they were
+        scheduled."""
+        self.expired_pipelines += n
+
+    def observe_latencies(self, latency_ticks: np.ndarray) -> None:
+        """Grant latencies (grant tick - submit tick) for newly granted
+        pipelines."""
+        latency_ticks = np.asarray(latency_ticks)
+        self.grants += int(latency_ticks.size)
+        self._latency.add(latency_ticks)
+
+    # ------------------------------------------------------------- summary
+    def summary(self, admission: Dict | None = None,
+                wall_seconds: float | None = None) -> Dict:
+        out = {
+            "ticks": self.ticks,
+            "cumulative_efficiency": self.cumulative_efficiency,
+            "cumulative_fairness": self.cumulative_fairness,
+            "cumulative_fairness_norm": self.cumulative_fairness_norm,
+            "mean_jain": self._jain_sum / max(self.ticks, 1),
+            "total_allocated": self.total_allocated,
+            "final_leftover": self.total_leftover,
+            "grants": self.grants,
+            "expired_pipelines": self.expired_pipelines,
+            "queue_depth_mean": self._queue_depth_sum /
+            max(self._boundaries, 1),
+            "queue_depth_max": self._queue_depth_max,
+            "grant_latency_ticks": self._latency.percentiles((50, 90, 99)),
+        }
+        if admission:
+            out["admission"] = dict(admission)
+            offered = max(admission.get("offered", 0), 1)
+            out["admission_rate"] = admission.get("admitted", 0) / offered
+            out["rejection_rate"] = admission.get("rejected", 0) / offered
+        if wall_seconds is not None and wall_seconds > 0:
+            out["wall_seconds"] = wall_seconds
+            out["ticks_per_second"] = self.ticks / wall_seconds
+            if admission:
+                out["admissions_per_second"] = \
+                    admission.get("admitted", 0) / wall_seconds
+        return out

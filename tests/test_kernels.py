@@ -94,3 +94,41 @@ def test_budget_kernels(M, K, bm, bk):
     np.testing.assert_allclose(
         np.asarray(ops.matvec_op(gamma, lam, block_m=bm, block_k=bk)),
         np.asarray(ref.matvec_ref(gamma, lam)), rtol=1e-4)
+
+
+class TestHotpathDispatch:
+    """The scheduler's hot-path dispatch (core.hotpath) must match the
+    kernels.ref oracles on arbitrary, non-tiling shapes — this is the
+    interpret-mode parity gate for wiring the budget kernels into
+    AnalystView / the waterfill sweeps behind ``use_pallas``."""
+
+    @pytest.mark.parametrize("M,K", [(6, 2000), (5, 123), (64, 1024)])
+    def test_rowmax_matches_ref(self, M, K):
+        from repro.core import hotpath
+        g = jax.random.uniform(KEY, (M, K), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(hotpath.rowmax(g, use_pallas=True)),
+            np.asarray(ref.rowmax_ref(g)), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(hotpath.rowmax(g, use_pallas=False)),
+            np.asarray(ref.rowmax_ref(g)), rtol=1e-6)
+
+    @pytest.mark.parametrize("M,K", [(6, 2000), (5, 123)])
+    def test_matvec_forms_match_ref(self, M, K):
+        from repro.core import hotpath
+        ks = jax.random.split(KEY, 3)
+        c = jax.random.uniform(ks[0], (M, K), jnp.float32)
+        lam = jax.random.uniform(ks[1], (K,), jnp.float32)
+        x = jax.random.uniform(ks[2], (M,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(hotpath.matvec(c, lam, use_pallas=True)),
+            np.asarray(ref.matvec_ref(c, lam)), rtol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(hotpath.matvec_t(c, x, use_pallas=True)),
+            np.asarray(ref.matvec_ref(c.T, x)), rtol=1e-4)
+
+    def test_pick_block_divides(self):
+        from repro.core.hotpath import _pick_block
+        for dim in (1, 5, 6, 100, 123, 2000, 4096):
+            b = _pick_block(dim, 256)
+            assert dim % b == 0 and 1 <= b <= min(dim, 256)

@@ -1,0 +1,325 @@
+"""Service-plane tests: replay parity against the engine (the streaming
+loop's correctness oracle), slot recycling + capacity conservation under
+continuous arrival, admission backpressure, trace generators, ledger-ring
+retirement, and streaming telemetry."""
+import numpy as np
+import pytest
+
+from repro.core import SCHEDULER_NAMES, SchedulerConfig
+from repro.service import (ArrivalTrace, FlaasService, ServiceConfig,
+                           SlotTable, StreamingTelemetry,
+                           collect_service_metrics, freeze_trace, make_trace,
+                           plan_mints, replay_gap)
+
+# small geometry: 4 devices x 2 blocks/tick = 8 blocks per tick
+SIZE = dict(n_devices=4, pipelines_per_analyst=6)
+
+
+def small_trace(pattern="poisson", seed=2, **extra):
+    kw = dict(SIZE)
+    kw.update(extra)
+    return make_trace("paper_default", pattern, seed=seed, **kw)
+
+
+class TestReplayParity:
+    """Acceptance: the service loop over a frozen finite trace reproduces
+    engine.run_episode per-round efficiency/fairness to 1e-5 for all four
+    schedulers."""
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    def test_frozen_trace_matches_engine(self, scheduler):
+        gaps = replay_gap(small_trace(), 10, SchedulerConfig(beta=2.2),
+                          scheduler, chunk_ticks=4)
+        for key, gap in gaps.items():
+            assert gap <= 1e-5, f"{scheduler}/{key}: {gap:.2e}"
+
+    @pytest.mark.parametrize("chunk", [1, 3, 10])
+    def test_chunking_does_not_change_metrics(self, chunk):
+        """Host-sync frequency is a performance knob, not a semantics knob:
+        any chunk size yields identical per-tick metrics."""
+        gaps = replay_gap(small_trace(seed=5), 10, SchedulerConfig(),
+                          "dpf", chunk_ticks=chunk)
+        assert max(gaps.values()) <= 1e-5
+
+    def test_diurnal_trace_also_freezes(self):
+        gaps = replay_gap(small_trace("diurnal", seed=7), 10,
+                          SchedulerConfig(), "fcfs", chunk_ticks=5)
+        assert max(gaps.values()) <= 1e-5
+
+    def test_short_trace_pads_ring_to_demand_window(self):
+        """A frozen window shorter than the demand window (5 ticks at
+        blocks_per_device=2) must still verify: the replay ring pads with
+        never-created slots, which are invisible to every scheduler
+        reduction."""
+        gaps = replay_gap(small_trace(seed=9), 4, SchedulerConfig(), "dpf",
+                          chunk_ticks=2)
+        assert max(gaps.values()) <= 1e-5
+
+
+class TestTraces:
+    def test_reset_is_deterministic(self):
+        a, b = small_trace(), small_trace().reset()
+        for t in range(6):
+            sa, sb = a.step(t), b.step(t)
+            assert len(sa) == len(sb)
+            for x, y in zip(sa, sb):
+                assert x.analyst == y.analyst
+                np.testing.assert_array_equal(x.bids[0], y.bids[0])
+                np.testing.assert_array_equal(x.eps[0], y.eps[0])
+
+    def test_non_consecutive_step_rejected(self):
+        tr = small_trace()
+        tr.step(0)
+        with pytest.raises(ValueError):
+            tr.step(2)
+
+    def test_unknown_pattern_rejected(self):
+        with pytest.raises(ValueError):
+            small_trace(pattern="lunar")
+
+    def test_diurnal_rate_modulates(self):
+        tr = small_trace("diurnal")
+        rates = [tr._rate(t) for t in range(tr._knobs["period"])]
+        assert max(rates) > tr.sim.arrival_rate > min(rates)
+        assert min(rates) >= 0.0
+
+    def test_churn_reuses_analyst_identities(self):
+        tr = small_trace("churn", seed=0)
+        ids = [s.analyst for t in range(40) for s in tr.step(t)]
+        assert len(ids) > len(set(ids))           # somebody returned
+        assert max(ids) < tr._knobs["pool"]
+
+    def test_churn_trace_cannot_freeze(self):
+        with pytest.raises(ValueError):
+            freeze_trace(small_trace("churn", seed=0), 40)
+
+    def test_bursty_switches_state(self):
+        tr = small_trace("bursty", seed=1)
+        rates = {tr._rate(t) for t in range(60)}
+        assert len(rates) == 2                    # quiet and burst levels
+
+
+class TestContinuousOperation:
+    """Acceptance: slot recycling never violates capacity conservation
+    under continuous arrival (validate=True raises on any violation)."""
+
+    def _run(self, pattern="poisson", ticks=40, **cfg_over):
+        trace = small_trace(pattern, seed=3)
+        kw = dict(scheduler="dpf", sched=SchedulerConfig(),
+                  analyst_slots=3, pipeline_slots=6,
+                  block_slots=10 * trace.blocks_per_tick,  # minimum ring
+                  chunk_ticks=8, admit_batch=8, max_pending=64,
+                  validate=True)
+        kw.update(cfg_over)
+        service = FlaasService(ServiceConfig(**kw), trace)
+        summary = service.run(ticks)
+        return service, summary
+
+    def test_recycling_and_conservation_with_ring_wrap(self):
+        """40 ticks x 8 blocks/tick through an 80-slot ring: the ledger
+        wraps 4x over, rows recycle continuously, conservation holds every
+        tick (the service validates each chunk)."""
+        service, summary = self._run()
+        stats = service.queue.stats
+        # more analysts served than rows exist -> rows really recycled
+        assert stats.admitted > service.cfg.analyst_slots
+        assert summary["grants"] > 0
+        # ring wrapped: every live block was minted within the last 10 ticks
+        birth = np.asarray(service.state.block_birth)
+        assert birth.min() >= 40 - 10
+        # queue ledger is consistent
+        assert stats.offered == stats.admitted + stats.rejected + \
+            service.queue.depth
+
+    def test_backpressure_rejects_when_queue_full(self):
+        service, summary = self._run("bursty", ticks=48, analyst_slots=2,
+                                     admit_batch=2, max_pending=4)
+        assert service.queue.stats.rejected > 0
+        assert 0.0 < summary["admission_rate"] < 1.0
+        assert summary["rejection_rate"] > 0.0
+
+    def test_occupancy_matches_admission_ledger(self):
+        service, summary = self._run(ticks=24)
+        occ = service.table.occupied
+        assert occ.shape == (3, 6)
+        # every admitted pipeline is either still occupying a slot or was
+        # released (granted or expired) — no over-admission, no leaks
+        live = service.queue.stats.pipelines_admitted - \
+            summary["grants"] - summary["expired_pipelines"]
+        assert int(occ.sum()) == live
+
+    def test_dpbalance_also_survives_streaming(self):
+        service, summary = self._run(scheduler="dpbalance", ticks=16,
+                                     sched=SchedulerConfig(beta=2.2))
+        assert summary["total_allocated"] > 0
+
+    def test_post_wrap_admissions_keep_their_demand(self):
+        """Regression: a ring mint must not wipe demand that prefetched
+        admissions just wrote for the block being minted.  All-mice,
+        depth-1 workload: every pipeline demands only its submit tick's
+        blocks, so if mints wiped fresh demand, every post-wrap round
+        would allocate phantom zero-budget grants and efficiency would
+        flatline at 0."""
+        trace = make_trace("mice_fleet", seed=11, n_devices=2,
+                           pipelines_per_analyst=4, p_ten_blocks=0.0)
+        svc = FlaasService(ServiceConfig(
+            scheduler="dpf", sched=SchedulerConfig(), analyst_slots=4,
+            pipeline_slots=4, block_slots=10 * trace.blocks_per_tick,
+            chunk_ticks=5, admit_batch=8, max_pending=64), trace)
+        from repro.service import collect_service_metrics
+        out = collect_service_metrics(svc, 30)
+        # ring wraps at tick 10; efficiency must stay real afterwards
+        assert float(out["round_efficiency"][12:].sum()) > 0.0
+        assert svc.telemetry.expired_pipelines == 0
+
+    def test_deferred_admission_drops_retired_block_demand(self):
+        """Regression: a submission deferred across a ring wrap must not
+        write demand at `bid % B` for blocks that were evicted while it
+        queued — that would alias the demand onto the newer blocks now in
+        those slots (budget granted from blocks never demanded)."""
+        from repro.service.traces import Submission
+        trace = small_trace(seed=0)                  # bpr = 8
+        svc = FlaasService(ServiceConfig(
+            scheduler="dpf", sched=SchedulerConfig(), analyst_slots=3,
+            pipeline_slots=6, block_slots=10 * trace.blocks_per_tick,
+            chunk_ticks=4, admit_batch=8, max_pending=64), trace)
+        bpr, B = trace.blocks_per_tick, svc.cfg.block_slots
+        # simulate a wrapped ledger: slots 0..bpr-1 now hold tick-10 blocks
+        svc._ledger_birth[:bpr] = 10
+        sub = Submission(
+            analyst=0, submit_tick=0,
+            bids=[np.array([0, 1, B, B + 1], np.int64)],   # tick-0 evicted,
+            eps=[np.full(4, 0.01, np.float32)],            # tick-10 alive
+            loss=np.array([0.9], np.float32))
+        rows, cols, bids, eps = svc._placement_arrays(
+            [(sub, 0, [0])], boundary_tick=12)[4:]
+        np.testing.assert_array_equal(bids, [0, 1])    # only live blocks
+        np.testing.assert_array_equal(rows, [0, 0])
+        assert eps.size == 2                           # stale eps dropped
+
+    def test_deferred_admission_drops_block_evicted_at_activation(self):
+        """Regression for the boundary-exact case: a block whose eviction
+        lands exactly on the deferred pipeline's activation tick is gone
+        the moment the pipeline becomes schedulable, but the in-scan wipe
+        is strict (`spawn_tick < t`) and the ledger at the boundary still
+        shows it alive — the admission check must drop it."""
+        from repro.service.traces import Submission
+        trace = small_trace(seed=0)                    # bpr = 8
+        svc = FlaasService(ServiceConfig(
+            scheduler="dpf", sched=SchedulerConfig(), analyst_slots=3,
+            pipeline_slots=6, block_slots=10 * trace.blocks_per_tick,
+            chunk_ticks=4, admit_batch=8, max_pending=64), trace)
+        bpr = trace.blocks_per_tick                    # B = 80
+        # ring minted through tick 9: slot s holds the tick s//bpr block
+        svc._ledger_birth[:] = np.arange(svc.cfg.block_slots) // bpr
+        # deferred from submit tick 5 to boundary 10 (spawn = 10): the
+        # tick-0 block (bid 0) is evicted at tick 10 == spawn -> drop;
+        # the tick-1 block (bid 8) is evicted at 11 > spawn -> keep.
+        sub = Submission(analyst=0, submit_tick=5,
+                         bids=[np.array([0, 8], np.int64)],
+                         eps=[np.full(2, 0.01, np.float32)],
+                         loss=np.array([0.9], np.float32))
+        bids, eps = svc._placement_arrays([(sub, 0, [0])],
+                                          boundary_tick=10)[6:]
+        np.testing.assert_array_equal(bids, [8])
+        assert eps.size == 1
+
+    def test_unservable_pipelines_expire_after_ring_wrap(self):
+        """A pipeline whose demand can never fit (demands >> block budget)
+        stays pending until every block it demanded retires from the ring,
+        then expires: completed with nothing, slot recycled, counted."""
+        trace = small_trace(seed=4, budget_range=(1e-4, 2e-4))
+        svc = FlaasService(ServiceConfig(
+            scheduler="dpf", sched=SchedulerConfig(), analyst_slots=3,
+            pipeline_slots=6, block_slots=10 * trace.blocks_per_tick,
+            chunk_ticks=8, admit_batch=8, max_pending=64), trace)
+        summary = svc.run(32)
+        assert summary["expired_pipelines"] > 0
+        assert summary["total_allocated"] == 0      # nothing ever fit
+        # expiry recycled rows, so admission kept flowing past one table
+        assert svc.queue.stats.admitted > svc.cfg.analyst_slots
+
+
+class TestStateHelpers:
+    @staticmethod
+    def _fresh_ledger(B):
+        return np.ones(B, np.float32), np.full(B, -1, np.int32)
+
+    def test_plan_mints_schedule(self):
+        budgets_dev = np.array([1.0, 2.0], np.float32)
+        plan = plan_mints(0, 3, 8, budgets_dev, 2, *self._fresh_ledger(8))
+        assert plan.mask.shape == plan.budgets.shape == (3, 8)
+        np.testing.assert_array_equal(np.where(plan.mask[0])[0], [0, 1, 2, 3])
+        np.testing.assert_array_equal(np.where(plan.mask[1])[0], [4, 5, 6, 7])
+        np.testing.assert_array_equal(np.where(plan.mask[2])[0], [0, 1, 2, 3])
+        np.testing.assert_allclose(plan.budgets[0, :4], [1, 1, 2, 2])
+        assert plan.retire                         # tick 2 re-mints slot 0
+        # precomputed ledger rows: uncreated slots carry the engine's
+        # budget_total sentinel (1.0) until their mint tick
+        np.testing.assert_array_equal(plan.created[0],
+                                      [1, 1, 1, 1, 0, 0, 0, 0])
+        np.testing.assert_array_equal(plan.created[1], np.ones(8, bool))
+        np.testing.assert_allclose(plan.budget_total[0],
+                                   [1, 1, 2, 2, 1, 1, 1, 1])
+        np.testing.assert_allclose(plan.budget_total[1],
+                                   [1, 1, 2, 2, 1, 1, 2, 2])
+        np.testing.assert_array_equal(plan.next_birth,
+                                      [2, 2, 2, 2, 1, 1, 1, 1])
+
+    def test_plan_mints_no_retire_when_ring_covers(self):
+        plan = plan_mints(0, 2, 8, np.ones(2, np.float32), 2,
+                          *self._fresh_ledger(8))
+        assert not plan.retire
+
+    def test_slot_table_free_list_recycles_rows(self):
+        t = SlotTable(2, 3)
+        r0 = t.row_for(7, 3)
+        assert r0 is not None
+        t.commit(7, r0[0], r0[1], submit_tick=0)
+        r1 = t.row_for(8, 3)
+        t.commit(8, r1[0], r1[1], submit_tick=0)
+        assert t.row_for(9, 1) is None            # table full -> defer
+        # analyst 7's pipelines complete -> its row returns to the free list
+        done = np.zeros((2, 3), bool)
+        done[r0[0], :] = True
+        freed = t.release_done(done)
+        assert freed.shape[0] == 3
+        r2 = t.row_for(9, 2)
+        assert r2 is not None and r2[0] == r0[0]  # recycled the freed row
+
+    def test_returning_analyst_keeps_its_row(self):
+        t = SlotTable(3, 4)
+        row, cols = t.row_for(42, 2)
+        t.commit(42, row, cols, submit_tick=0)
+        again = t.row_for(42, 2)
+        assert again is not None and again[0] == row
+        assert t.row_for(42, 3) is None           # row lacks 3 free slots
+
+
+class TestTelemetry:
+    def test_reservoir_percentiles(self):
+        tel = StreamingTelemetry(latency_reservoir=1000)
+        tel.observe_latencies(np.arange(100))
+        p = tel.summary()["grant_latency_ticks"]
+        assert abs(p["p50"] - 49.5) < 1.0 and p["p99"] >= 98
+        assert tel.grants == 100
+
+    def test_streaming_aggregates(self):
+        tel = StreamingTelemetry()
+        ys = {"round_efficiency": np.array([1.0, 2.0]),
+              "round_fairness": np.array([-3.0, -3.0]),
+              "round_fairness_norm": np.array([0.5, 1.0]),
+              "round_jain": np.array([1.0, 0.5]),
+              "n_allocated": np.array([3, 4]),
+              "leftover": np.array([9.0, 8.0])}
+        tel.observe_chunk(ys)
+        tel.observe_chunk(ys)
+        tel.observe_boundary(queue_depth=5)
+        s = tel.summary(admission={"offered": 10, "admitted": 8,
+                                   "rejected": 2}, wall_seconds=2.0)
+        assert s["ticks"] == 4
+        assert s["cumulative_efficiency"] == pytest.approx(6.0)
+        assert s["total_allocated"] == 14
+        assert s["admission_rate"] == pytest.approx(0.8)
+        assert s["ticks_per_second"] == pytest.approx(2.0)
+        assert s["queue_depth_max"] == 5
