@@ -68,22 +68,29 @@ def _engine_vs_legacy() -> list:
 
 
 def _fleet_scaling() -> list:
+    """Times BOTH fleet execution modes at every size so a single JSON
+    report carries the data the per-backend ``run_fleet(mode="auto")``
+    default table in ``core/engine.py`` is set from (``is_auto`` marks the
+    rows the current default actually executes)."""
     rows = []
     cfg = SchedulerConfig(beta=2.2)
-    mode = resolve_fleet_mode("auto")   # what run_fleet actually executes
+    auto = resolve_fleet_mode("auto")
     for s in ("dpf", "dpbalance"):
-        base_us = None
+        base_us = {}
         for n in FLEET_SIZES:
             fleet = stack_episodes(
                 generate_episode(dataclasses.replace(FLEET_SIM, seed=k))
                 for k in range(n))
-            us = time_fn(lambda f: run_fleet(f, cfg, s), fleet, iters=3)
-            if base_us is None:
-                base_us = us
-            rows.append((f"fleet_scaling/{s}/seeds{n}", us, derived(
-                vs_single=round(us / base_us, 2),
-                us_per_seed=round(us / n, 1),
-                mode=mode)))
+            for mode in ("map", "vmap"):
+                us = time_fn(lambda f: run_fleet(f, cfg, s, mode=mode),
+                             fleet, iters=3)
+                base_us.setdefault(mode, us)
+                rows.append((f"fleet_scaling/{s}/seeds{n}/{mode}", us,
+                             derived(
+                                 vs_single=round(us / base_us[mode], 2),
+                                 us_per_seed=round(us / n, 1),
+                                 mode=mode, auto_mode=auto,
+                                 is_auto=int(mode == auto))))
     return rows
 
 

@@ -1,6 +1,6 @@
 """service_throughput — the streaming service plane under load.
 
-Three question groups:
+Four question groups:
 
 * **chunk size**: ticks/sec and admissions/sec as the host-sync interval
   grows (chunk=1 is a host round-trip per tick, the legacy regime; larger
@@ -9,12 +9,23 @@ Three question groups:
   bounded queue (backpressure engaged, mean/max depth reported);
 * **service tick vs engine round at paper size**: the acceptance bar — the
   chunked tick loop must sustain at least the engine's rounds/sec on the
-  paper's §VI geometry (host sync only at chunk boundaries).
+  paper's §VI geometry (host sync only at chunk boundaries);
+* **shard throughput** (:func:`shard_throughput`): the sharded service
+  plane's shard-count sweep at paper size and at 8x the paper's block
+  count (ledger striped over a device mesh; see ``docs/sharding.md``).
+  On a CPU runner the mesh is emulated
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), so these rows
+  measure *correct scaling structure* (shard-local sweeps + small
+  collectives), not accelerator speedups — emulated "devices" share the
+  same cores.
 """
 import time
 
+import jax
+
 from repro.core import SchedulerConfig, SimConfig, generate_episode, run_episode
 from repro.service import FlaasService, ServiceConfig, make_trace
+from repro.shard import ShardedFlaasService
 
 from .common import SMALL, derived, time_fn
 
@@ -167,5 +178,55 @@ def _vs_engine_paper_size() -> list:
     return rows
 
 
+def shard_throughput() -> list:
+    """Shard-count sweep of :class:`ShardedFlaasService` — paper geometry
+    (B = 2000 ring) and an 8x-block-count geometry (B = 16000: beyond one
+    paper-sized device budget when each shard holds 1/S of the [M, N, B]
+    demand tensor).  Rows report ticks/sec, per-shard ledger stripe size,
+    and the 1-shard baseline ratio.  Public so the multi-device CI job can
+    run this section alone."""
+    n_dev = len(jax.devices())
+    shard_counts = [s for s in (1, 2, 4, 8) if s <= n_dev]
+    ticks = 8 if SMALL else 24
+    geoms = [("paper", dict(n_devices=100), 2000)]
+    if not SMALL:
+        geoms.append(("blocks8x", dict(n_devices=800), 16000))
+    else:
+        geoms.append(("blocks8x", dict(n_devices=100,
+                                       blocks_per_round_per_device=16),
+                      16000))
+    rows = []
+    for label, size, ring in geoms:
+        trace = make_trace("paper_default", "poisson", seed=0,
+                           **size).precompute(ticks)
+
+        def make(n_shards):
+            cfg = ServiceConfig(
+                scheduler="dpf", sched=SchedulerConfig(beta=2.2),
+                analyst_slots=6, pipeline_slots=25, block_slots=ring,
+                chunk_ticks=8, admit_batch=16, max_pending=256,
+                validate=False)
+            return ShardedFlaasService(cfg, trace.reset(),
+                                       n_shards=n_shards)
+
+        base_tps = None
+        for s in shard_counts:
+            wall, summary = _timed_run(lambda: make(s), ticks,
+                                       iters=1 if SMALL else 2)
+            tps = ticks / wall
+            if base_tps is None:
+                base_tps = tps
+            rows.append((f"shard_throughput/{label}/shards{s}",
+                         wall * 1e6 / ticks, derived(
+                             ticks_per_s=round(tps, 2),
+                             vs_one_shard=round(tps / base_tps, 3),
+                             blocks_per_shard=ring // s,
+                             ring_blocks=ring,
+                             devices_visible=n_dev,
+                             admitted=summary["admission"]["admitted"])))
+    return rows
+
+
 def run() -> list:
-    return _chunk_sweep() + _queue_pressure() + _vs_engine_paper_size()
+    return (_chunk_sweep() + _queue_pressure() + _vs_engine_paper_size() +
+            shard_throughput())

@@ -61,6 +61,34 @@ def smoke() -> tuple:
         print(f"smoke/service_dpf,NaN,error={type(e).__name__}",
               file=sys.stderr)
         failures += 1
+
+    # shard_throughput smoke: the sharded service over however many
+    # devices the runner has (1 on a plain CPU; the sharded CI job runs
+    # with an 8-device emulated mesh), ring wrap included.
+    try:
+        import jax
+
+        from repro.shard import ShardedFlaasService
+
+        n_shards = min(2, len(jax.devices()))
+        trace = make_trace("paper_default", "poisson", seed=0, n_devices=4,
+                           pipelines_per_analyst=6)
+        svc_cfg = ServiceConfig(
+            scheduler="dpf", sched=cfg, analyst_slots=4, pipeline_slots=6,
+            block_slots=10 * trace.blocks_per_tick, chunk_ticks=4,
+            admit_batch=8, max_pending=32)
+        summary = ShardedFlaasService(svc_cfg, trace,
+                                      n_shards=n_shards).run(12)
+        rows.append(("smoke/sharded_service_dpf",
+                     summary["wall_seconds"] * 1e6 / summary["ticks"],
+                     derived(n_shards=summary["sharding"]["n_shards"],
+                             ticks_per_s=round(summary["ticks_per_second"], 1),
+                             allocated=summary["total_allocated"])))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/sharded_service_dpf,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
     return failures, rows
 
 

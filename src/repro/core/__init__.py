@@ -1,4 +1,5 @@
 """DPBalance core — the paper's contribution as a composable JAX module."""
+from .blockaxis import LOCAL, BlockAxis
 from .demand import (AnalystView, RoundInputs, analyst_demand,
                      analyst_max_share, normalized_demand,
                      pipeline_max_share)
@@ -18,6 +19,7 @@ from .scenarios import (SCENARIOS, get_scenario, make_fleet,
 from .simulation import FlaasSimulator, SimConfig, run_simulation
 
 __all__ = [
+    "LOCAL", "BlockAxis",
     "AnalystView", "RoundInputs", "analyst_demand", "analyst_max_share",
     "normalized_demand", "pipeline_max_share", "alpha_fair_objective",
     "analyst_utility", "default_lambda", "dominant_efficiency",

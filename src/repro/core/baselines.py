@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from . import demand as dm
 from . import utility as ut
+from .blockaxis import LOCAL, BlockAxis
 from .scheduler import RoundResult, SchedulerConfig
 
 _EPS = 1e-9
@@ -27,15 +28,22 @@ _FEAS = 1e-6
 _BIG = 1e30
 
 
-def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn):
-    """Flatten pipelines, sort by key_fn ascending, grant-if-fits scan."""
+def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn,
+                      block_axis: BlockAxis = LOCAL):
+    """Flatten pipelines, sort by key_fn ascending, grant-if-fits scan.
+
+    Sharded ``block_axis``: the sort key is reduced across shards first so
+    the visit order is identical everywhere; the grant-if-fits scan then
+    keeps per-block remaining capacity shard-local with one cross-shard
+    AND per visited pipeline."""
     M, N, K = rnd.demand.shape
     gamma = dm.normalized_demand(rnd.demand, rnd.budget_total)
-    mu_ij = dm.pipeline_max_share(gamma)
+    mu_ij = dm.pipeline_max_share(gamma, block_axis)
     cap_frac = rnd.capacity / jnp.maximum(rnd.budget_total, _EPS)
 
-    active = rnd.active & ~dm.infeasible_pipelines(gamma, cap_frac, _FEAS)
-    key = key_fn(rnd, gamma, mu_ij)                      # [M, N]
+    active = rnd.active & ~dm.infeasible_pipelines(gamma, cap_frac, _FEAS,
+                                                   block_axis)
+    key = key_fn(rnd, gamma, mu_ij, block_axis)          # [M, N]
     key = jnp.where(active, key, _BIG).reshape(-1)
     order = jnp.argsort(key)
     # pre-permute into visit order so the scan streams rows instead of
@@ -45,7 +53,7 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn):
 
     def step(remaining, xs):
         dem, act = xs
-        ok = act & jnp.all(dem <= remaining + _FEAS)
+        ok = act & block_axis.all(jnp.all(dem <= remaining + _FEAS))
         remaining = jnp.where(ok, remaining - dem, remaining)
         return remaining, ok
 
@@ -60,9 +68,9 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn):
     view = dm.AnalystView.build(
         dm.RoundInputs(rnd.demand, active, rnd.arrival, rnd.loss,
                        rnd.capacity, rnd.budget_total, rnd.now), cfg.tau,
-        cfg.use_pallas)
+        cfg.use_pallas, block_axis)
     realized = jnp.sum(gamma * x_ij[..., None], axis=1)
-    mu_real = jnp.max(realized, axis=-1)
+    mu_real = block_axis.max(jnp.max(realized, axis=-1))
     util = mu_real * view.a_i * view.mask
     eff = ut.dominant_efficiency(util, view.mask)
     fair = ut.dominant_fairness(util, cfg.beta, view.mask)
@@ -76,16 +84,16 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn):
         sp1_violation=jnp.zeros(()))
 
 
-def _dpf_key(rnd, gamma, mu_ij):
+def _dpf_key(rnd, gamma, mu_ij, block_axis=LOCAL):
     return mu_ij                                   # smallest dominant share
 
 
-def _dpk_key(rnd, gamma, mu_ij):
-    total = jnp.sum(gamma, axis=-1)                # total normalized demand
+def _dpk_key(rnd, gamma, mu_ij, block_axis=LOCAL):
+    total = block_axis.sum(jnp.sum(gamma, axis=-1))  # total normalized demand
     return total                                   # lowest demand packs first
 
 
-def _fcfs_key(rnd, gamma, mu_ij):
+def _fcfs_key(rnd, gamma, mu_ij, block_axis=LOCAL):
     return rnd.arrival                             # earliest arrival first
 
 

@@ -1,0 +1,68 @@
+"""Cross-shard reduction hooks for block-axis sweeps.
+
+Every scheduler stage sweeps the block axis somewhere: the dominant-share
+row-max (Eq 3/4), the waterfill dual-ascent matvecs, SP2 feasibility
+checks, the kappa-boost water level.  On one device those are plain jnp
+reductions; on a block-sharded mesh (``repro.shard``) each device holds
+only its stripe of the ``[..., B]`` arrays and the *same* code must finish
+each reduction with a collective over the mesh axis.
+
+:class:`BlockAxis` is that seam.  The default :data:`LOCAL` (``name=None``)
+makes every hook the identity, so the single-device path is untouched —
+byte-for-byte the pre-sharding code.  Inside ``shard_map`` the caller
+passes ``BlockAxis("shard")`` and each hook becomes the matching
+``jax.lax`` collective.  The object is hashable (frozen dataclass) so it
+can ride through ``jax.jit`` static arguments.
+
+Convention: callers reduce their *local* block stripe with jnp first, then
+hand the partial result to the hook — e.g. ``bx.max(jnp.max(g, axis=-1))``
+— so the hook only ever sees block-free shapes and the collective payload
+stays small (analyst- or pipeline-indexed, never block-indexed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockAxis:
+    """Reduction hooks over the (possibly sharded) block axis.
+
+    ``name`` is the mesh axis the block dimension is sharded over, or None
+    for the single-device layout.
+    """
+
+    name: Optional[str] = None
+
+    @property
+    def sharded(self) -> bool:
+        return self.name is not None
+
+    # partial-result combiners: x is the local stripe's reduction
+    def max(self, x):
+        return jax.lax.pmax(x, self.name) if self.name else x
+
+    def min(self, x):
+        return jax.lax.pmin(x, self.name) if self.name else x
+
+    def sum(self, x):
+        return jax.lax.psum(x, self.name) if self.name else x
+
+    # boolean combiners (pmax/pmin are not defined on bool everywhere, so
+    # route through i32)
+    def any(self, x):
+        if not self.name:
+            return x
+        return jax.lax.pmax(x.astype(jnp.int32), self.name).astype(bool)
+
+    def all(self, x):
+        if not self.name:
+            return x
+        return jax.lax.pmin(x.astype(jnp.int32), self.name).astype(bool)
+
+
+LOCAL = BlockAxis(None)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from . import hotpath
+from .blockaxis import LOCAL, BlockAxis
 
 Array = jax.Array
 
@@ -47,19 +48,21 @@ def normalized_demand(demand: Array, budget_total: Array) -> Array:
     return demand / jnp.maximum(budget_total, _EPS)[None, None, :]
 
 
-def pipeline_max_share(gamma: Array) -> Array:
+def pipeline_max_share(gamma: Array, block_axis: BlockAxis = LOCAL) -> Array:
     """mu_ij = max_k gamma_ij^<k>  (Eq. 3).  [M, N]."""
-    return jnp.max(gamma, axis=-1)
+    return block_axis.max(jnp.max(gamma, axis=-1))
 
 
 def infeasible_pipelines(gamma: Array, cap_frac: Array,
-                         slack: float = 1e-6) -> Array:
+                         slack: float = 1e-6,
+                         block_axis: BlockAxis = LOCAL) -> Array:
     """Pipelines whose demand exceeds remaining capacity on any block —
     they can never satisfy one-or-more this round and are masked out (they
     stay pending for the next).  [M, N] bool.  Single source of truth for
     the round-level feasibility rule (scheduler, baselines, engine
     diagnostics all use it)."""
-    return jnp.any(gamma > cap_frac[None, None, :] + slack, axis=-1)
+    return block_axis.any(
+        jnp.any(gamma > cap_frac[None, None, :] + slack, axis=-1))
 
 
 def analyst_demand(gamma: Array, active: Array) -> Array:
@@ -68,12 +71,14 @@ def analyst_demand(gamma: Array, active: Array) -> Array:
     return jnp.sum(gamma * active[..., None], axis=1)
 
 
-def analyst_max_share(gamma_i: Array, use_pallas: bool = False) -> Array:
+def analyst_max_share(gamma_i: Array, use_pallas: bool = False,
+                      block_axis: BlockAxis = LOCAL) -> Array:
     """mu_i = max_k gamma_i^<k>  (Eq. 4).  [M].
 
     ``use_pallas`` routes the row-max through the Pallas budget kernel
-    (production-scale [M, K] sweep; see :mod:`repro.core.hotpath`)."""
-    return hotpath.rowmax(gamma_i, use_pallas)
+    (production-scale [M, K] sweep; see :mod:`repro.core.hotpath`); on a
+    block-sharded mesh the local row-max is finished with a ``pmax``."""
+    return block_axis.max(hotpath.rowmax(gamma_i, use_pallas))
 
 
 def waiting_coefficient(arrival: Array, now: Array, tau: float) -> Array:
@@ -110,12 +115,12 @@ class AnalystView:
     mask: Array      # [M]    analyst has any active demand
 
     @classmethod
-    def build(cls, rnd: RoundInputs, tau: float,
-              use_pallas: bool = False) -> "AnalystView":
+    def build(cls, rnd: RoundInputs, tau: float, use_pallas: bool = False,
+              block_axis: BlockAxis = LOCAL) -> "AnalystView":
         gamma = normalized_demand(rnd.demand, rnd.budget_total)
-        mu_ij = pipeline_max_share(gamma)
+        mu_ij = pipeline_max_share(gamma, block_axis)
         g_i = analyst_demand(gamma, rnd.active)
-        mu_i = analyst_max_share(g_i, use_pallas)
+        mu_i = analyst_max_share(g_i, use_pallas, block_axis)
         t_i = analyst_waiting(rnd.arrival, rnd.active, rnd.now)
         T_i = jnp.exp(-t_i / tau)
         l_i = analyst_loss(rnd.loss, mu_ij, rnd.active)

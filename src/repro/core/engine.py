@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import utility as ut
+from .blockaxis import LOCAL, BlockAxis
 from .demand import (AnalystView, RoundInputs, infeasible_pipelines,
                      normalized_demand)
 from .registry import get_round_fn
@@ -140,6 +141,34 @@ def generate_episode(cfg) -> Episode:
         block_round=jnp.asarray(block_round), n_rounds=R)
 
 
+def round_diagnostics(rnd: RoundInputs, res, cfg: SchedulerConfig,
+                      block_axis: BlockAxis = LOCAL) -> Dict[str, jax.Array]:
+    """Per-round SP1-level diagnostics (the quantities the fairness-axiom
+    tests consume), shared by the engine scan and the service tick loop.
+
+    Replicates the scheduler's own pipeline masking (pipelines demanding
+    exhausted blocks are dropped for the round) so the per-analyst
+    aggregates match what the solver actually saw."""
+    gamma = normalized_demand(rnd.demand, rnd.budget_total)
+    cap_frac = rnd.capacity / jnp.maximum(rnd.budget_total, _EPS)
+    unsat = infeasible_pipelines(gamma, cap_frac, block_axis=block_axis)
+    sched_rnd = dataclasses.replace(rnd, active=rnd.active & ~unsat)
+    view = AnalystView.build(sched_rnd, cfg.tau, cfg.use_pallas, block_axis)
+    return dict(
+        utility=res.utility,
+        analyst_mask=view.mask,
+        a_i=view.a_i,
+        gamma_i=view.gamma_i,
+        mu_i=view.mu_i,
+        x_analyst=res.x_analyst,
+        sp1_violation=res.sp1_violation,
+        # realized per-analyst grant in normalized (share) units
+        granted_i=jnp.sum(gamma * res.x_pipeline[..., None], axis=1),
+        cap_frac=cap_frac,
+        selected=res.selected,
+    )
+
+
 def _episode_metrics(ep: Episode, cfg: SchedulerConfig, round_fn,
                      diagnostics: bool) -> Dict[str, jax.Array]:
     """Traceable: run all rounds of one episode in a single lax.scan."""
@@ -180,27 +209,7 @@ def _episode_metrics(ep: Episode, cfg: SchedulerConfig, round_fn,
             "overdraw": jnp.max(res.consumed - capacity),
         }
         if diagnostics:
-            gamma = normalized_demand(rnd.demand, budget_total)
-            # replicate the scheduler's own pipeline masking (pipelines
-            # demanding exhausted blocks are dropped for the round) so the
-            # per-analyst aggregates match what the solver actually saw.
-            cap_frac = capacity / jnp.maximum(budget_total, _EPS)
-            unsat = infeasible_pipelines(gamma, cap_frac)
-            sched_rnd = dataclasses.replace(rnd, active=active & ~unsat)
-            view = AnalystView.build(sched_rnd, cfg.tau, cfg.use_pallas)
-            out.update(
-                utility=res.utility,
-                analyst_mask=view.mask,
-                a_i=view.a_i,
-                gamma_i=view.gamma_i,
-                mu_i=view.mu_i,
-                x_analyst=res.x_analyst,
-                sp1_violation=res.sp1_violation,
-                # realized per-analyst grant in normalized (share) units
-                granted_i=jnp.sum(gamma * res.x_pipeline[..., None], axis=1),
-                cap_frac=cap_frac,
-                selected=res.selected,
-            )
+            out.update(round_diagnostics(rnd, res, cfg))
 
         capacity = jnp.maximum(capacity - res.consumed, 0.0)
         done = done | res.selected
@@ -259,14 +268,30 @@ def run_episode(episode: Episode, sched_cfg: SchedulerConfig,
     return out
 
 
+# Per-backend default for run_fleet(mode="auto"), set from collected
+# benchmark reports (benchmarks/run.py --json: meta.backend +
+# fleet_scaling/*/{map,vmap} rows time BOTH modes at every fleet size).
+#   cpu — report 2026-07-28, jax 0.4.37, 2-core runner: the 64-seed
+#     dpbalance fleet runs 15.3ms under map vs 45.3ms under vmap (3.0x —
+#     batched while_loops run lockstep, so every seed pays the slowest
+#     seed's SP1 iteration count), and 3.3ms vs 3.5ms at 8 seeds; dpf
+#     mildly prefers vmap (1.78ms vs 2.27ms at 64 seeds).  map wins where
+#     the time goes.
+#   gpu / tpu — no collected report yet: they fall back to vmap (lockstep
+#     batching is the accelerator-native layout); replace the fallback
+#     with a table entry once a report from real hardware exists.
+_FLEET_MODE_DEFAULT = {"cpu": "map"}
+_FLEET_MODE_FALLBACK = "vmap"
+
+
 def resolve_fleet_mode(mode: str = "auto") -> str:
     """The concrete fleet execution mode ``run_fleet`` will use for
-    ``mode`` on the current backend ('map' on CPU, 'vmap' on accelerators).
-    Public so benchmarks/telemetry can *record* the resolved choice — the
-    ROADMAP item "pick per-backend fleet defaults from data" needs the
-    choice in the emitted data."""
+    ``mode`` on the current backend (data-driven table above).  Public so
+    benchmarks/telemetry can *record* the resolved choice alongside the
+    measurements the next table update is made from."""
     if mode == "auto":
-        return "map" if jax.default_backend() == "cpu" else "vmap"
+        return _FLEET_MODE_DEFAULT.get(jax.default_backend(),
+                                       _FLEET_MODE_FALLBACK)
     if mode not in ("vmap", "map"):
         raise ValueError(f"unknown fleet mode {mode!r}; use 'vmap'/'map'/'auto'")
     return mode

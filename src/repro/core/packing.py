@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .blockaxis import LOCAL, BlockAxis
+
 _EPS = 1e-9
 _FEAS = 1e-6  # feasibility slack (float32 headroom on normalized shares)
 _BIG = 1e30
@@ -41,15 +43,19 @@ class PackResult(NamedTuple):
     objective: jax.Array  # scalar Eq-20 value
 
 
-def greedy_cover(gamma, mu, active, budget):
-    """Select max-count pipeline set by ascending-mu greedy.  [N,K]->[N] bool."""
+def greedy_cover(gamma, mu, active, budget, block_axis: BlockAxis = LOCAL):
+    """Select max-count pipeline set by ascending-mu greedy.  [N,K]->[N] bool.
+
+    ``mu`` must be the *global* dominant share (already reduced across
+    shards), so the visit order is identical on every shard; each step's
+    fits-check is a local all finished with a cross-shard AND."""
     N = mu.shape[0]
     key = jnp.where(active, mu, _BIG)
     order = jnp.argsort(key)
 
     def step(remaining, idx):
         dem = gamma[idx]
-        ok = active[idx] & jnp.all(dem <= remaining + _FEAS)
+        ok = active[idx] & block_axis.all(jnp.all(dem <= remaining + _FEAS))
         remaining = jnp.where(ok, remaining - dem, remaining)
         return remaining, ok
 
@@ -58,7 +64,8 @@ def greedy_cover(gamma, mu, active, budget):
     return sel & active
 
 
-def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float):
+def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float,
+                       block_axis: BlockAxis = LOCAL):
     """Eq 20 heuristic: x=1 for selected, then greedy kappa boosts in
     descending mu*a order.  Returns (x_ij, used, objective).
 
@@ -79,7 +86,9 @@ def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float):
         dem, is_sel = xs
         ratio = jnp.where(dem > _EPS, leftover / jnp.maximum(dem, _EPS),
                           jnp.inf)
-        extra = jnp.clip(jnp.min(ratio), 0.0, kappa_max - 1.0)
+        # boost water level = min over ALL blocks the pipeline touches
+        # (cross-shard min on a sharded ledger)
+        extra = jnp.clip(block_axis.min(jnp.min(ratio)), 0.0, kappa_max - 1.0)
         extra = jnp.where(is_sel, extra, 0.0)
         leftover = leftover - extra * dem
         return leftover, extra
@@ -92,13 +101,15 @@ def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float):
     return x, used, obj
 
 
-def _boost_objective(gamma, mu, a, active, sel, budget, kappa_max):
+def _boost_objective(gamma, mu, a, active, sel, budget, kappa_max,
+                     block_axis: BlockAxis = LOCAL):
     _, _, obj = proportional_boost(gamma, mu, a, active, sel, budget,
-                                   kappa_max)
+                                   kappa_max, block_axis)
     return obj
 
 
-def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float):
+def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float,
+                block_axis: BlockAxis = LOCAL):
     """Single-swap local search: for every (selected s, unselected u) try
     sel - {s} + {u}; keep the feasible candidate with the best boosted
     objective.  Count is preserved by construction."""
@@ -110,33 +121,39 @@ def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float):
         cand = sel.at[s].set(False).at[u].set(True)
         valid = sel[s] & (~sel[u]) & active[u] & (s != u)
         used = jnp.sum(gamma * cand[:, None], axis=0)
-        feasible = jnp.all(used <= budget + _FEAS)
+        feasible = block_axis.all(jnp.all(used <= budget + _FEAS))
         return cand, valid & feasible
 
     cands, valids = jax.vmap(make_candidate)(s_flat, u_flat)
     objs = jax.vmap(
-        lambda c: _boost_objective(gamma, mu, a, active, c, budget, kappa_max)
+        lambda c: _boost_objective(gamma, mu, a, active, c, budget, kappa_max,
+                                   block_axis)
     )(cands)
     objs = jnp.where(valids, objs, -_BIG)
-    base_obj = _boost_objective(gamma, mu, a, active, sel, budget, kappa_max)
+    base_obj = _boost_objective(gamma, mu, a, active, sel, budget, kappa_max,
+                                block_axis)
     best = jnp.argmax(objs)
     improved = objs[best] > base_obj + 1e-12
     return jnp.where(improved, cands[best], sel)
 
 
-@functools.partial(jax.jit, static_argnames=("kappa_max", "refine"))
-def pack_analyst(gamma, mu, a, active, budget,
-                 kappa_max: float = 8.0, refine: bool = True) -> PackResult:
+@functools.partial(jax.jit, static_argnames=("kappa_max", "refine",
+                                             "block_axis"))
+def pack_analyst(gamma, mu, a, active, budget, kappa_max: float = 8.0,
+                 refine: bool = True,
+                 block_axis: BlockAxis = LOCAL) -> PackResult:
     """Full SP2 for one analyst.  vmap over analysts for the batched version."""
-    sel = greedy_cover(gamma, mu, active, budget)
+    sel = greedy_cover(gamma, mu, active, budget, block_axis)
     if refine:
-        sel = swap_refine(gamma, mu, a, active, sel, budget, kappa_max)
+        sel = swap_refine(gamma, mu, a, active, sel, budget, kappa_max,
+                          block_axis)
     x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget,
-                                      kappa_max)
+                                      kappa_max, block_axis)
     return PackResult(x_ij=x, selected=sel, used=used, objective=obj)
 
 
-pack_all = jax.vmap(pack_analyst, in_axes=(0, 0, 0, 0, 0, None, None), out_axes=0)
+pack_all = jax.vmap(pack_analyst, in_axes=(0, 0, 0, 0, 0, None, None, None),
+                    out_axes=0)
 
 
 def exact_pack(gamma, mu, a, active, budget, kappa_max: float = 8.0):

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from . import demand as dm
 from . import utility as ut
+from .blockaxis import LOCAL, BlockAxis
 from .packing import pack_all
 from .waterfill import alpha_fair_waterfill
 
@@ -62,24 +63,30 @@ class RoundResult(NamedTuple):
     sp1_violation: jax.Array
 
 
-def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
+def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
+                    block_axis: BlockAxis = LOCAL) -> RoundResult:
+    """One DPBalance round.  With a sharded ``block_axis`` (see
+    :mod:`repro.shard`) the demand/capacity operands are the caller's local
+    block stripes and every per-block sweep stays shard-local; only the
+    analyst-level aggregates cross the mesh."""
     gamma = dm.normalized_demand(rnd.demand, rnd.budget_total)
-    mu_ij = dm.pipeline_max_share(gamma)
+    mu_ij = dm.pipeline_max_share(gamma, block_axis)
 
     # Pipelines demanding exhausted blocks can never satisfy one-or-more:
     # mask them out of this round (they stay pending for the next).
     cap_frac = rnd.capacity / jnp.maximum(rnd.budget_total, _EPS)
-    active = rnd.active & ~dm.infeasible_pipelines(gamma, cap_frac)
+    active = rnd.active & ~dm.infeasible_pipelines(gamma, cap_frac,
+                                                   block_axis=block_axis)
     rnd = dataclasses.replace(rnd, active=active)
 
-    view = dm.AnalystView.build(rnd, cfg.tau, cfg.use_pallas)
+    view = dm.AnalystView.build(rnd, cfg.tau, cfg.use_pallas, block_axis)
 
     # SP1 — analyst-level alpha-fair allocation.
     c = view.gamma_i * (view.a_i[:, None] if cfg.weighted_constraints else 1.0)
     sp1 = alpha_fair_waterfill(
         view.mu_i, view.a_i, c, view.mask, cap=cap_frac,
         beta=cfg.beta, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-        use_pallas=cfg.use_pallas)
+        use_pallas=cfg.use_pallas, block_axis=block_axis)
     budget_i = view.gamma_i * sp1.x[:, None]          # [M, K] granted vectors
 
     # SP2 — per-analyst packing (Alg.1 lines 3-7); per-pipeline weights
@@ -87,7 +94,7 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
     T_ij = dm.waiting_coefficient(rnd.arrival, rnd.now, cfg.tau)
     a_ij = T_ij * rnd.loss
     pack = pack_all(gamma, mu_ij, a_ij, active, budget_i,
-                    cfg.kappa_max, cfg.refine)
+                    cfg.kappa_max, cfg.refine, block_axis)
 
     x_ij = pack.x_ij
     grants = rnd.demand * x_ij[..., None]             # epsilon units
@@ -95,14 +102,14 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig) -> RoundResult:
     # Safety: never overdraw physical capacity (numerical guard).
     over = consumed > rnd.capacity * (1.0 + 1e-6) + 1e-7
     scale = jnp.where(over, rnd.capacity / jnp.maximum(consumed, _EPS), 1.0)
-    grant_scale = jnp.min(scale)
+    grant_scale = block_axis.min(jnp.min(scale))
     grants = grants * grant_scale
     consumed = consumed * grant_scale
     leftover = jnp.maximum(rnd.capacity - consumed, 0.0)
 
     # Metrics — realized dominant share per analyst after SP2+returns.
     realized = jnp.sum(gamma * x_ij[..., None], axis=1)        # [M, K]
-    mu_real = jnp.max(realized, axis=-1)                       # mu_i * x_i
+    mu_real = block_axis.max(jnp.max(realized, axis=-1))       # mu_i * x_i
     util = mu_real * view.a_i * view.mask
     eff = ut.dominant_efficiency(util, view.mask)
     fair = ut.dominant_fairness(util, cfg.beta, view.mask)

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from . import hotpath
+from .blockaxis import LOCAL, BlockAxis
 
 _EPS = 1e-12
 
@@ -42,16 +43,21 @@ class WaterfillResult(NamedTuple):
     iters: jax.Array      # iterations executed
 
 
-def _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas=False):
-    """x_i(lambda) from KKT stationarity, clipped to the per-analyst cap."""
-    denom = jnp.maximum(hotpath.matvec(c, lam, use_pallas), _EPS)   # [M]
+def _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas=False,
+                 block_axis: BlockAxis = LOCAL):
+    """x_i(lambda) from KKT stationarity, clipped to the per-analyst cap.
+
+    On a block-sharded mesh ``c``/``lam`` are local stripes; the matvec's
+    partial sums are finished with a psum so x_i is replicated."""
+    denom = jnp.maximum(
+        block_axis.sum(hotpath.matvec(c, lam, use_pallas)), _EPS)   # [M]
     x = (w_pow / denom) ** (1.0 / beta)
     x = jnp.minimum(x, xcap)
     return jnp.where(mask, x, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "max_iters", "tol",
-                                             "use_pallas"))
+                                             "use_pallas", "block_axis"))
 def alpha_fair_waterfill(
     mu: jax.Array,          # [M] analyst dominant-share coefficient
     a: jax.Array,           # [M] T(t_i) l_i weights
@@ -62,8 +68,15 @@ def alpha_fair_waterfill(
     max_iters: int = 4000,
     tol: float = 1e-6,
     use_pallas: bool = False,   # route [M,K] sweeps through Pallas kernels
+    block_axis: BlockAxis = LOCAL,  # cross-shard hooks (repro.shard)
 ) -> WaterfillResult:
-    """Solve SP1.  Returns ratios x_i >= 0 with sum_i c_ik x_i <= cap_k."""
+    """Solve SP1.  Returns ratios x_i >= 0 with sum_i c_ik x_i <= cap_k.
+
+    With a sharded ``block_axis``, ``c``/``cap`` are the caller's local
+    block stripes and the per-block multipliers stay shard-local for the
+    whole ascent; only the [M]-sized analyst aggregates (matvec partials,
+    feasibility caps, the KKT error) cross the mesh, once per iteration.
+    """
     assert beta > 0, "alpha-fairness requires beta > 0"
     M, K = c.shape
     if cap is None:
@@ -73,8 +86,8 @@ def alpha_fair_waterfill(
 
     # x_i <= min_k cap_k / c_ik is necessary for feasibility (others use >= 0).
     ratio = jnp.where(c > _EPS, cap[None, :] / jnp.maximum(c, _EPS), jnp.inf)
-    xcap = jnp.min(ratio, axis=1)
-    cmax = jnp.max(c, axis=1)
+    xcap = block_axis.min(jnp.min(ratio, axis=1))
+    cmax = block_axis.max(jnp.max(c, axis=1))
     mask = mask & (cmax > _EPS) & jnp.isfinite(xcap)
     xcap = jnp.where(mask, xcap, 0.0)
 
@@ -87,28 +100,31 @@ def alpha_fair_waterfill(
 
     def body(state):
         lam, it, _ = state
-        x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas)
-        g = (hotpath.matvec_t(c, x, use_pallas) - cap) / cap_safe  # [K]
+        x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas,
+                         block_axis)
+        g = (hotpath.matvec_t(c, x, use_pallas) - cap) / cap_safe  # [K] local
         eta = 0.5 / (1.0 + 0.001 * it)           # decaying multiplicative step
         lam_new = lam * jnp.exp(eta * g)
         lam_new = jnp.clip(lam_new, 1e-12, 1e12)
         # KKT error: primal feasibility AND complementary slackness.  Checking
         # feasibility alone would accept lam=1 on an underloaded system.
+        # The error is reduced across shards so every shard's while_loop
+        # agrees on the iteration count.
         feas = jnp.max(jnp.maximum(g, 0.0))
         comp = jnp.max(lam_new * jnp.abs(g))
-        viol = jnp.maximum(feas, comp)
+        viol = block_axis.max(jnp.maximum(feas, comp))
         return lam_new, it + 1, viol
 
     lam, iters, _ = jax.lax.while_loop(
         cond, body, (lam0, jnp.array(0), jnp.array(jnp.inf, dtype=c.dtype))
     )
-    x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas)
+    x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas, block_axis)
 
     # Final exact projection: uniform scale-down of any residual overshoot so
     # the output is *always* feasible (privacy budgets must never overdraw).
-    load = hotpath.matvec_t(c, x, use_pallas)     # [K]
+    load = hotpath.matvec_t(c, x, use_pallas)     # [K] local
     ratio = jnp.where(load > cap, cap_safe / jnp.maximum(load, _EPS), 1.0)
-    x = x * jnp.min(ratio)
-    violation = jnp.max(
-        jnp.maximum(hotpath.matvec_t(c, x, use_pallas) - cap, 0.0) / cap_safe)
+    x = x * block_axis.min(jnp.min(ratio))
+    violation = block_axis.max(jnp.max(
+        jnp.maximum(hotpath.matvec_t(c, x, use_pallas) - cap, 0.0) / cap_safe))
     return WaterfillResult(x=x, lam=lam, violation=violation, iters=iters)

@@ -42,8 +42,17 @@ def set_mesh(mesh):
     return _legacy_set_mesh(mesh)
 
 
-def make_mesh(axis_shapes, axis_names):
-    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    ``devices`` builds the mesh over an explicit device subset (e.g. a
+    1-shard or 4-shard submesh of an 8-device host) — ``jax.make_mesh``
+    always consumes every device, so submeshes construct ``Mesh``
+    directly (works on every supported jax version)."""
+    if devices is not None:
+        import numpy as np
+        return jax.sharding.Mesh(
+            np.asarray(devices).reshape(axis_shapes), axis_names)
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         return jax.make_mesh(axis_shapes, axis_names,

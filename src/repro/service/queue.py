@@ -44,6 +44,13 @@ class AdmissionQueue:
     def depth(self) -> int:
         return len(self.pending)
 
+    def pending_pipelines(self) -> int:
+        """Total pipelines (not submissions) waiting — the demand side of
+        the sharded plane's chunk-boundary free-slot census (the supply
+        side is the all-gathered per-shard count; see
+        :func:`repro.shard.gather_shard_view`)."""
+        return sum(s.n_pipelines for s in self.pending)
+
     def offer(self, subs: List[Submission]) -> int:
         """Enqueue new submissions; returns how many were rejected."""
         rejected = 0

@@ -90,8 +90,15 @@ def collect_service_metrics(service: FlaasService,
 
 def replay_gap(trace: ArrivalTrace, n_ticks: int, sched_cfg: SchedulerConfig,
                scheduler: str = "dpbalance", *, chunk_ticks: int = 4,
-               keys: Iterable[str] = PARITY_KEYS) -> Dict[str, float]:
-    """Max |service - engine| per metric over a frozen trace prefix."""
+               keys: Iterable[str] = PARITY_KEYS,
+               service_factory=FlaasService,
+               block_slots_multiple: int = 1) -> Dict[str, float]:
+    """Max |service - engine| per metric over a frozen trace prefix.
+
+    ``service_factory(cfg, trace)`` builds the service under test — the
+    sharded plane passes ``ShardedFlaasService`` (partial'd with its
+    mesh), whose ring must be padded to a multiple of the shard count
+    (``block_slots_multiple``)."""
     episode = freeze_trace(trace.reset(), n_ticks)
     M, N, K = episode.demand.shape
     oracle = run_episode(episode, sched_cfg, scheduler)
@@ -102,11 +109,13 @@ def replay_gap(trace: ArrivalTrace, n_ticks: int, sched_cfg: SchedulerConfig,
     # the schedulers perform is unchanged (short traces stay verifiable).
     block_slots = max(K, demand_window_ticks(trace.blocks_per_device) *
                       trace.blocks_per_tick)
+    m = block_slots_multiple
+    block_slots = -(-block_slots // m) * m
     cfg = ServiceConfig(
         scheduler=scheduler, sched=sched_cfg, analyst_slots=M,
         pipeline_slots=N, block_slots=block_slots, chunk_ticks=chunk_ticks,
         admit_batch=max(M, 1), max_pending=max(4 * M, 64))
-    service = FlaasService(cfg, trace.reset())
+    service = service_factory(cfg, trace.reset())
     got = collect_service_metrics(service, n_ticks)
     gaps = {}
     for k in keys:

@@ -29,7 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import utility as ut
+from repro.core.blockaxis import LOCAL, BlockAxis
 from repro.core.demand import RoundInputs
+from repro.core.engine import round_diagnostics
 from repro.core.registry import get_round_fn
 from repro.core.scheduler import SchedulerConfig
 from repro.core.simulation import ROUND_SECONDS
@@ -51,12 +53,14 @@ class ServiceConfig:
     admit_batch: int = 32          # max submissions admitted per boundary
     max_pending: int = 1024        # queue bound (backpressure beyond this)
     validate: bool = True          # host-checks conservation per chunk
+    diagnostics: bool = False      # per-tick SP1 diagnostics in chunk output
     latency_reservoir: int = 100_000
 
 
 def _chunk_metrics(state: ServiceState, mint_ops, *,
                    cfg: SchedulerConfig, round_fn, n_ticks: int,
-                   retire: bool):
+                   retire: bool, diagnostics: bool = False,
+                   block_axis: BlockAxis = LOCAL):
     """Traceable: run ``n_ticks`` service ticks in one ``lax.scan``.
 
     Mirrors ``engine._episode_metrics`` tick-for-tick so a wrap-free ledger
@@ -84,7 +88,7 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             arrival=jnp.where(pending, state.arrival, 0.0),
             loss=jnp.where(pending, state.loss, 1.0),
             capacity=capacity, budget_total=budget_total, now=now)
-        res = round_fn(rnd, cfg)
+        res = round_fn(rnd, cfg, block_axis=block_axis)
         mask = jnp.sum(pending, axis=1) > 0
         out = {
             "round_efficiency": res.efficiency,
@@ -93,13 +97,15 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
                 res.utility, cfg.beta, mask),
             "round_jain": res.jain,
             "n_allocated": res.n_allocated,
-            "leftover": jnp.sum(res.leftover),
-            "conservation_gap": jnp.max(jnp.abs(
+            "leftover": block_axis.sum(jnp.sum(res.leftover)),
+            "conservation_gap": block_axis.max(jnp.max(jnp.abs(
                 jnp.where(created, capacity - res.consumed - res.leftover,
-                          0.0))),
-            "overdraw": jnp.max(res.consumed - capacity),
+                          0.0)))),
+            "overdraw": block_axis.max(jnp.max(res.consumed - capacity)),
             "selected": res.selected,
         }
+        if diagnostics:
+            out.update(round_diagnostics(rnd, res, cfg, block_axis))
         return res, out
 
     def body(carry, xs):
@@ -126,7 +132,7 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             # grantable" — greedy_cover would hand it a phantom zero-budget
             # grant.  It *expires* instead: completed with nothing, slot
             # recycled at the boundary, counted separately in telemetry.
-            has_demand = jnp.any(demand > 0.0, axis=-1)
+            has_demand = block_axis.any(jnp.any(demand > 0.0, axis=-1))
             expired = pending & ~has_demand
             pending = pending & has_demand
         res, out = tick_out(demand, pending, capacity, budget_total,
@@ -152,11 +158,11 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
 
 @functools.lru_cache(maxsize=128)
 def _compiled_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
-                    retire: bool):
+                    retire: bool, diagnostics: bool = False):
     round_fn = get_round_fn(scheduler)
     return jax.jit(functools.partial(
         _chunk_metrics, cfg=cfg, round_fn=round_fn, n_ticks=n_ticks,
-        retire=retire))
+        retire=retire, diagnostics=diagnostics))
 
 
 class FlaasService:
@@ -208,21 +214,31 @@ class FlaasService:
         self.telemetry.observe_boundary(self.queue.depth)
         return tick0
 
+    def _slot_of(self, bids: np.ndarray) -> np.ndarray:
+        """Global block id -> ledger ring slot.  Subclass hook: the sharded
+        service overrides this with a striped layout (repro.shard)."""
+        return bids % self.cfg.block_slots
+
+    def _compiled_step(self, n_ticks: int, retire: bool):
+        """Compiled ``(state, mint_ops) -> (final_carry, ys)`` chunk step.
+        Subclass hook: the sharded service returns a shard_map'd step."""
+        return _compiled_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
+                               retire, self.cfg.diagnostics)
+
     def _plan_chunk(self, tick0: int, n_ticks: int):
         """(plan, device mint_ops, compiled step) for the upcoming chunk."""
         plan = plan_mints(tick0, n_ticks, self.cfg.block_slots,
                           self.trace.device_budget,
                           self.trace.blocks_per_device,
-                          self._ledger_budget, self._ledger_birth)
+                          self._ledger_budget, self._ledger_birth,
+                          slot_fn=self._slot_of)
         if plan.retire:
             ops = (jnp.asarray(plan.mask), jnp.asarray(plan.budgets),
                    jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
         else:   # budgets rows double as the capacity-add operand
             ops = (jnp.asarray(plan.budgets),
                    jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
-        step = _compiled_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
-                               plan.retire)
-        return plan, ops, step
+        return plan, ops, self._compiled_step(n_ticks, plan.retire)
 
     def tick_loop_fn(self, n_ticks: int):
         """The pure compiled tick loop for the upcoming chunk, as a
@@ -322,7 +338,7 @@ class FlaasService:
                 # (its successor `bid + B` mints strictly after
                 # spawn_tick; evictions after activation are handled by
                 # the in-scan stale wipe, which is strict in spawn_tick).
-                slots = sub.bids[j] % B
+                slots = self._slot_of(sub.bids[j])
                 keep = ((self._ledger_birth[slots] <= sub.bids[j] // bpr) &
                         ((sub.bids[j] + B) // bpr > spawn_tick))
                 rows.append(np.full(int(keep.sum()), row, np.int64))

@@ -146,15 +146,22 @@ class MintPlan:
 
 def plan_mints(tick0: int, n_ticks: int, block_slots: int,
                device_budget: np.ndarray, blocks_per_device: int,
-               prev_budget: np.ndarray, prev_birth: np.ndarray) -> MintPlan:
+               prev_budget: np.ndarray, prev_birth: np.ndarray,
+               slot_fn=None) -> MintPlan:
     """Mint schedule for ticks ``[tick0, tick0 + n_ticks)``; ``prev_*``
-    are the host ledger mirrors at the chunk boundary."""
+    are the host ledger mirrors at the chunk boundary.
+
+    ``slot_fn`` maps global block ids to ring slots (default ``bid % B``).
+    Any layout whose slot is reused exactly by ``bid + B`` works — the
+    sharded service uses a striped layout so each mesh shard owns the
+    ``bid % n_shards`` stripe (see :mod:`repro.shard`)."""
     n_devices = device_budget.shape[0]
     bpr = n_devices * blocks_per_device
     B = block_slots
     ticks = np.arange(tick0, tick0 + n_ticks, dtype=np.int64)
     bids = ticks[:, None] * bpr + np.arange(bpr)[None, :]      # global ids
-    slots = (bids % B).astype(np.int64)
+    slots = ((bids % B) if slot_fn is None else slot_fn(bids)).astype(
+        np.int64)
     rows = np.repeat(np.arange(n_ticks), bpr)
     flat = slots.reshape(-1)
     per_tick = np.tile(

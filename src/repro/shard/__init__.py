@@ -1,0 +1,29 @@
+"""Sharded multi-host service plane — block-ledger mesh sharding.
+
+Partitions the service plane's block-ledger ring and the ``[M, N, B]``
+demand tensor's block axis across a jax device mesh, turning the
+single-device streaming service (:mod:`repro.service`) into a scale-out
+system:
+
+* :mod:`repro.shard.state` — striped ring layout (shard ``s`` owns the
+  ``bid % S`` stripe; mints and retirement are shard-local), block-axis
+  ``NamedSharding``s, :class:`ShardedServiceState`;
+* :mod:`repro.shard.service` — :class:`ShardedFlaasService`, whose chunk
+  tick loop runs inside ``shard_map`` with per-shard SP1/SP2 sweeps and
+  analyst-level ``psum``/``pmax`` reductions, plus the chunk-boundary
+  free-slot all-gather behind admission.
+
+Parity: a 1-shard mesh is bit-identical to ``FlaasService``; an N-shard
+mesh matches to 1e-5 for all four schedulers (see ``docs/sharding.md``
+and ``tests/test_shard_service.py``).  CPU-only hosts emulate a mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from .service import ShardedFlaasService, gather_shard_view
+from .state import (AXIS, ShardedServiceState, mesh_shards, ring_slots,
+                    shard_mesh, shard_state, state_shardings, state_specs)
+
+__all__ = [
+    "AXIS", "ShardedFlaasService", "ShardedServiceState",
+    "gather_shard_view", "mesh_shards", "ring_slots", "shard_mesh",
+    "shard_state", "state_shardings", "state_specs",
+]

@@ -1,0 +1,208 @@
+"""The sharded service plane: FlaasService over a block-sharded mesh.
+
+:class:`ShardedFlaasService` is the scale-out server: the block-ledger
+ring and the demand tensor's block axis are partitioned over a 1-D device
+mesh (:mod:`repro.shard.state`), and each chunk's tick loop runs as ONE
+``shard_map`` program in which
+
+* every per-block sweep (waterfill dual ascent, SP2 feasibility scans,
+  capacity debits, mint/retire selects) touches only the shard's local
+  ``B/S`` stripe — this is the memory and FLOP win;
+* the analyst-level reductions (``mu_i`` row-max, matvec partials, the
+  greedy pass's global visit order, KKT errors) finish with small
+  ``psum``/``pmax`` collectives whose payloads are analyst- or
+  pipeline-indexed, never block-indexed;
+* mints stay **shard-local** by construction of the striped ring layout
+  (shard ``s`` owns the ``bid % S == s`` stripe), so ring retirement needs
+  no cross-shard traffic at all.
+
+Admission stays on the host exactly as in :class:`FlaasService`: at every
+chunk boundary the server all-gathers per-shard free-slot counts
+(:func:`gather_shard_view`) — the signal a multi-host admission queue
+needs — and then drains the same FIFO queue with the same backpressure
+rules, so the sharded and unsharded services admit identically.
+
+Parity contract (pinned by ``tests/test_shard_service.py``): on a 1-shard
+mesh the layout and the arithmetic are bit-identical to
+:class:`FlaasService`; on an N-shard mesh every metric matches to 1e-5
+(the residual is float reassociation in psum partial sums) for all four
+schedulers, ring wraps included.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.blockaxis import BlockAxis
+from repro.core.registry import get_round_fn
+from repro.core.scheduler import SchedulerConfig
+from repro.distributed import compat
+from repro.service.server import FlaasService, ServiceConfig, _chunk_metrics
+from repro.service.state import NEVER
+from repro.service.traces import ArrivalTrace
+
+from .state import (AXIS, ShardedServiceState, mesh_shards, shard_mesh,
+                    state_specs)
+
+_METRIC_KEYS = ("round_efficiency", "round_fairness", "round_fairness_norm",
+                "round_jain", "n_allocated", "leftover", "conservation_gap",
+                "overdraw", "selected")
+# diagnostics keys carrying a (sharded) block axis, by trailing-dims spec
+_DIAG_SPECS = {"gamma_i": P(None, None, AXIS), "granted_i": P(None, None, AXIS),
+               "cap_frac": P(None, AXIS)}
+_DIAG_REPLICATED = ("utility", "analyst_mask", "a_i", "mu_i", "x_analyst",
+                    "sp1_violation")
+
+
+def _ys_specs(retire: bool, diagnostics: bool) -> Dict[str, P]:
+    ys = {k: P() for k in _METRIC_KEYS}
+    if retire:
+        ys["expired"] = P()
+    if diagnostics:
+        ys.update({k: P() for k in _DIAG_REPLICATED})
+        ys.update(_DIAG_SPECS)
+    return ys
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
+                   retire: bool, diagnostics: bool, mesh):
+    """Compiled shard_map'd analogue of ``server._compiled_chunk``: the
+    SAME ``_chunk_metrics`` body, with every block-axis operand passed as
+    a local stripe and the cross-shard reductions routed through
+    ``BlockAxis(AXIS)``."""
+    round_fn = get_round_fn(scheduler)
+    fn = functools.partial(
+        _chunk_metrics, cfg=cfg, round_fn=round_fn, n_ticks=n_ticks,
+        retire=retire, diagnostics=diagnostics, block_axis=BlockAxis(AXIS))
+    n_ops = 4 if retire else 3
+    carry = (P(None, None, AXIS), P(), P(AXIS)) if retire else (P(), P(AXIS))
+    sm = compat.shard_map(
+        fn, mesh=mesh,
+        in_specs=(state_specs(), (P(None, AXIS),) * n_ops),
+        out_specs=(carry, _ys_specs(retire, diagnostics)),
+        # check_rep/check_vma chokes on collectives under scan/while_loop
+        # on older jax; replication of the P() outputs is guaranteed by
+        # construction (they are all post-collective values).
+        check=False)
+    return jax.jit(sm)
+
+
+@functools.lru_cache(maxsize=16)
+def _shard_view_fn(mesh):
+    """Per-shard free-slot census, all-gathered so every shard (and the
+    host) sees the same admission picture: live minted blocks per shard
+    plus the replicated pipeline-slot occupancy."""
+    def census(capacity, birth, spawn_tick, done):
+        live = jnp.sum(((birth >= 0) & (capacity > 0.0)).astype(jnp.int32))
+        occupied = jnp.sum(((spawn_tick != NEVER) & ~done).astype(jnp.int32))
+        return jax.lax.all_gather(live, AXIS), occupied
+
+    return jax.jit(compat.shard_map(
+        census, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(), P()),
+        out_specs=(P(), P()), check=False))
+
+
+def gather_shard_view(service: "ShardedFlaasService"):
+    """(per-shard live-block counts ``[S]``, free pipeline slots) from the
+    device — the chunk-boundary all-gather behind sharded admission."""
+    st = service.state                    # always mesh-committed (setter)
+    live, occupied = _shard_view_fn(service.mesh)(
+        st.block_capacity, st.block_birth, st.spawn_tick, st.done)
+    M, N, _ = st.demand.shape
+    return np.asarray(live), int(M * N - int(occupied))
+
+
+class ShardedFlaasService(FlaasService):
+    """Long-running scheduling service with a block-sharded ledger.
+
+    Drop-in for :class:`FlaasService` (same config, traces, telemetry,
+    replay machinery); ``mesh``/``n_shards`` pick the shard layout.
+    ``cfg.block_slots`` must divide evenly over the shards."""
+
+    def __init__(self, cfg: ServiceConfig, trace: ArrivalTrace, *,
+                 mesh=None, n_shards: int | None = None):
+        if mesh is None:
+            mesh = shard_mesh(n_shards)
+        elif n_shards is not None and mesh_shards(mesh) != n_shards:
+            raise ValueError(
+                f"mesh has {mesh_shards(mesh)} shards but n_shards="
+                f"{n_shards} was also given")
+        # ShardedServiceState owns the layout invariants (ring
+        # divisibility, striped slot map, mesh re-commit); the `state`
+        # property below routes every host graft through it, starting
+        # with the base constructor's fresh-state assignment.
+        self.sharded = None
+        self._boot_mesh = mesh
+        super().__init__(cfg, trace)
+        self._ops_sharding = NamedSharding(mesh, P(None, AXIS))
+        self.shard_live_blocks = np.zeros(mesh_shards(mesh), np.int64)
+        self.free_pipeline_slots = cfg.analyst_slots * cfg.pipeline_slots
+
+    # ------------------------------------------------------------- layout
+    @property
+    def mesh(self):
+        return (self.sharded.mesh if self.sharded is not None
+                else self._boot_mesh)
+
+    @property
+    def n_shards(self) -> int:
+        return self.sharded.n_shards
+
+    @property
+    def state(self):
+        return self.sharded.state
+
+    @state.setter
+    def state(self, value):
+        # every assignment (fresh create, admit batch, post-chunk graft)
+        # re-commits to the block-axis layout; already-placed leaves are
+        # no-ops.
+        if self.sharded is None:
+            self.sharded = ShardedServiceState.commit(value, self._boot_mesh)
+        else:
+            self.sharded = self.sharded.put(value)
+
+    def _slot_of(self, bids: np.ndarray) -> np.ndarray:
+        return self.sharded.slot_of(bids)
+
+    # -------------------------------------------------------------- chunk
+    def _compiled_step(self, n_ticks: int, retire: bool):
+        step = _sharded_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
+                              retire, self.cfg.diagnostics, self.mesh)
+        ops_sharding = self._ops_sharding
+
+        def run(state, ops):
+            # state is mesh-committed by the `state` setter; the mint-plan
+            # operands are host-built per chunk and committed here.
+            ops = tuple(jax.device_put(op, ops_sharding) for op in ops)
+            return step(state, ops)
+
+        return run
+
+    # ----------------------------------------------------------- boundary
+    def admit_boundary(self, n_ticks: int) -> int:
+        # sharded admission: all-gather the per-shard ledger census before
+        # the host drains the queue — placement/backpressure then proceed
+        # exactly as in the unsharded service (the queue is host-global).
+        self.shard_live_blocks, self.free_pipeline_slots = \
+            gather_shard_view(self)
+        return super().admit_boundary(n_ticks)
+
+    def summary(self) -> Dict:
+        out = super().summary()
+        out["sharding"] = {
+            "n_shards": self.n_shards,
+            "blocks_per_shard": self.cfg.block_slots // self.n_shards,
+            "shard_live_blocks": [int(x) for x in self.shard_live_blocks],
+            "free_pipeline_slots": int(self.free_pipeline_slots),
+            "pending_pipelines": self.queue.pending_pipelines(),
+        }
+        return out

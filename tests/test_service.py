@@ -5,7 +5,7 @@ retirement, and streaming telemetry."""
 import numpy as np
 import pytest
 
-from repro.core import SCHEDULER_NAMES, SchedulerConfig
+from repro.core import SCENARIOS, SCHEDULER_NAMES, SchedulerConfig
 from repro.service import (ArrivalTrace, FlaasService, ServiceConfig,
                            SlotTable, StreamingTelemetry,
                            collect_service_metrics, freeze_trace, make_trace,
@@ -238,6 +238,61 @@ class TestContinuousOperation:
         assert summary["total_allocated"] == 0      # nothing ever fit
         # expiry recycled rows, so admission kept flowing past one table
         assert svc.queue.stats.admitted > svc.cfg.analyst_slots
+
+
+class TestStreamingFairnessMatrix:
+    """Service-plane fairness invariants over the full 9-scenario x
+    4-scheduler matrix: capacity conservation holds on every streaming
+    cell (validate=True raises inside the run), and DPBalance's SP1
+    allocation is envy-free (Thm 3) on every scenario — asserted from the
+    service loop's own per-tick diagnostics, not the engine's."""
+
+    SIZE = dict(n_devices=4, pipelines_per_analyst=5)
+    TICKS = 8
+    _TINY = 1e-9
+
+    def _run(self, scenario, scheduler, diagnostics=False):
+        trace = make_trace(scenario, "poisson", seed=3, **self.SIZE)
+        cfg = ServiceConfig(
+            scheduler=scheduler, sched=SchedulerConfig(beta=2.2),
+            analyst_slots=3, pipeline_slots=5,
+            block_slots=10 * trace.blocks_per_tick, chunk_ticks=4,
+            admit_batch=8, max_pending=64, validate=True,
+            diagnostics=diagnostics)
+        return collect_service_metrics(FlaasService(cfg, trace), self.TICKS)
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    def test_streaming_conservation(self, scenario, scheduler):
+        out = self._run(scenario, scheduler)
+        assert float(np.max(out["conservation_gap"])) <= 1e-4
+        assert float(np.max(out["overdraw"])) <= 1e-4
+        eff = np.asarray(out["round_efficiency"])
+        assert np.all(np.isfinite(eff)) and np.all(eff >= 0.0)
+
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    def test_streaming_envy_freeness(self, scenario):
+        """Thm 3 on the streaming path: at every service tick, no analyst
+        prefers another's SP1 grant vector — the largest multiple of its
+        own demand that fits inside the other's bundle never beats its own
+        allocation ratio."""
+        d = self._run(scenario, "dpbalance", diagnostics=True)
+        g, x1 = d["gamma_i"], d["x_analyst"]
+        mu, a, msk = d["mu_i"], d["a_i"], d["analyst_mask"]
+        worst = 0.0
+        for t in range(g.shape[0]):
+            for i in np.where(msk[t])[0]:
+                own = a[t, i] * mu[t, i] * x1[t, i]
+                for j in np.where(msk[t])[0]:
+                    if i == j:
+                        continue
+                    bundle = g[t, j] * x1[t, j]
+                    x_swap = np.where(
+                        g[t, i] > self._TINY,
+                        bundle / np.maximum(g[t, i], self._TINY),
+                        np.inf).min()
+                    worst = max(worst, a[t, i] * mu[t, i] * x_swap - own)
+        assert worst <= 1e-3, worst
 
 
 class TestStateHelpers:

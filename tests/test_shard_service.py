@@ -1,0 +1,205 @@
+"""Sharded service plane: striped ring layout, block-axis NamedShardings,
+and the exact-parity oracle — ``ShardedFlaasService`` on a 1-shard mesh
+and on an N-shard emulated mesh must reproduce ``FlaasService`` (and,
+through the replay oracle, ``engine.run_episode``) to the pinned 1e-5 for
+all four schedulers, with ring retirement exercised per-shard.
+
+The multi-shard half needs >= 4 devices; CPU-only runners get them via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI job
+``sharded`` does exactly that).  The 1-shard half runs everywhere.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SCHEDULER_NAMES, SchedulerConfig
+from repro.service import (FlaasService, ServiceConfig,
+                           collect_service_metrics, make_trace, replay_gap)
+from repro.shard import (ShardedFlaasService, ShardedServiceState,
+                         gather_shard_view, ring_slots, shard_mesh)
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 4, reason="needs >= 4 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# small geometry: 4 devices x 2 blocks/tick = 8 blocks per tick; the
+# 80-slot ring covers 10 ticks, so a 16-tick run wraps it (retirement on
+# every shard stripe).
+SIZE = dict(n_devices=4, pipelines_per_analyst=6)
+RING, TICKS = 80, 16
+PARITY_SCENARIOS = ("paper_default", "bursty_arrivals", "tight_budgets")
+METRICS = ("round_efficiency", "round_fairness", "round_fairness_norm",
+           "round_jain", "n_allocated", "leftover")
+
+
+def small_trace(scenario="paper_default", seed=2):
+    return make_trace(scenario, "poisson", seed=seed, **SIZE)
+
+
+def service_pair(scheduler, scenario="paper_default", n_shards=1, seed=2):
+    trace = small_trace(scenario, seed)
+    cfg = ServiceConfig(scheduler=scheduler, sched=SchedulerConfig(beta=2.2),
+                        analyst_slots=3, pipeline_slots=6, block_slots=RING,
+                        chunk_ticks=4, admit_batch=8, max_pending=64)
+    return (FlaasService(cfg, trace.reset()),
+            ShardedFlaasService(cfg, trace.reset(), n_shards=n_shards))
+
+
+def max_gap(ya, yb, keys=METRICS):
+    """Scale-normalized max gap (same convention as replay_gap)."""
+    worst = 0.0
+    for k in keys:
+        a = np.asarray(ya[k], np.float64)
+        b = np.asarray(yb[k], np.float64)
+        worst = max(worst, float(np.max(np.abs(a - b)) /
+                                 max(1.0, np.max(np.abs(a)))))
+    return worst
+
+
+class TestStripedRing:
+    def test_one_shard_degenerates_to_modulo(self):
+        bids = np.arange(1000)
+        np.testing.assert_array_equal(ring_slots(bids, 1, RING), bids % RING)
+
+    @pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+    def test_window_bijection(self, n_shards):
+        """Any window of B consecutive bids fills the B slots exactly once
+        — the ring invariant that makes retirement well-defined."""
+        for start in (0, 7, RING - 3):
+            slots = ring_slots(np.arange(start, start + RING), n_shards, RING)
+            assert sorted(slots.tolist()) == list(range(RING))
+
+    @pytest.mark.parametrize("n_shards", [2, 4])
+    def test_mints_are_shard_local_stripes(self, n_shards):
+        """bid's slot falls in the global range owned by shard bid % S."""
+        per = RING // n_shards
+        bids = np.arange(5 * RING)
+        assert (ring_slots(bids, n_shards, RING) // per == bids % n_shards).all()
+
+    def test_retirement_horizon_unchanged(self):
+        """Slot of bid is reused exactly by bid + B (same horizon as the
+        unsharded bid % B ring, which the host eviction logic assumes)."""
+        bids = np.arange(3 * RING)
+        for n_shards in (1, 2, 4):
+            s = ring_slots(bids, n_shards, RING)
+            np.testing.assert_array_equal(ring_slots(bids + RING, n_shards,
+                                                     RING), s)
+
+
+class TestShardedState:
+    def test_create_requires_divisible_ring(self):
+        if N_DEV < 2:
+            pytest.skip("needs >= 2 devices for an indivisible ring")
+        with pytest.raises(ValueError):
+            ShardedServiceState.create(2, 4, 81, shard_mesh(2))
+
+    def test_create_and_layout(self):
+        mesh = shard_mesh(min(2, N_DEV))
+        st = ShardedServiceState.create(2, 4, RING, mesh)
+        assert st.n_shards == min(2, N_DEV)
+        assert st.blocks_per_shard == RING // st.n_shards
+        assert st.state.demand.shape == (2, 4, RING)
+        # the ledger really is laid out along the mesh
+        n_addr = len(st.state.block_capacity.sharding.device_set)
+        assert n_addr == st.n_shards
+
+    def test_shard_mesh_rejects_oversubscription(self):
+        with pytest.raises(ValueError):
+            shard_mesh(N_DEV + 1)
+
+    def test_mesh_n_shards_conflict_rejected(self):
+        trace = small_trace()
+        cfg = ServiceConfig(scheduler="dpf", sched=SchedulerConfig(),
+                            analyst_slots=3, pipeline_slots=6,
+                            block_slots=RING, chunk_ticks=4)
+        with pytest.raises(ValueError):
+            ShardedFlaasService(cfg, trace, mesh=shard_mesh(1),
+                                n_shards=N_DEV + 1)
+
+    def test_service_rejects_indivisible_ring(self):
+        if N_DEV < 2:
+            pytest.skip("needs >= 2 devices")
+        trace = small_trace()
+        cfg = ServiceConfig(scheduler="dpf", sched=SchedulerConfig(),
+                            analyst_slots=3, pipeline_slots=6,
+                            block_slots=RING + 1, chunk_ticks=4)
+        with pytest.raises(ValueError):
+            ShardedFlaasService(cfg, trace, n_shards=2)
+
+
+class TestOneShardParity:
+    """A 1-shard mesh is the same layout and the same arithmetic — parity
+    with FlaasService must hold everywhere, ring wrap included."""
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    def test_matches_unsharded_through_ring_wrap(self, scheduler):
+        plain, sharded = service_pair(scheduler, n_shards=1)
+        ya = collect_service_metrics(plain, TICKS)
+        yb = collect_service_metrics(sharded, TICKS)
+        assert max_gap(ya, yb) <= 1e-5
+
+    def test_replay_oracle_through_sharded_service(self):
+        """Transitively: sharded service == FlaasService == run_episode
+        on a frozen trace prefix (the PR-2 oracle, now over shard_map)."""
+        factory = functools.partial(ShardedFlaasService, n_shards=1)
+        gaps = replay_gap(small_trace(), 10, SchedulerConfig(beta=2.2),
+                          "dpbalance", chunk_ticks=4,
+                          service_factory=factory)
+        assert max(gaps.values()) <= 1e-5
+
+
+@multi_device
+class TestMultiShardParity:
+    """Acceptance: >= 4-shard emulated mesh matches FlaasService within
+    1e-5 for all four schedulers on paper_default / bursty_arrivals /
+    tight_budgets, on runs long enough to wrap the ring."""
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    @pytest.mark.parametrize("scenario", PARITY_SCENARIOS)
+    def test_four_shards_match(self, scenario, scheduler):
+        plain, sharded = service_pair(scheduler, scenario, n_shards=4)
+        ya = collect_service_metrics(plain, TICKS)
+        yb = collect_service_metrics(sharded, TICKS)
+        # 16 ticks x 8 blocks/tick through an 80-slot ring: wrapped
+        assert int(np.asarray(sharded.state.block_birth).min()) >= TICKS - 10
+        assert max_gap(ya, yb) <= 1e-5
+
+    def test_shard_count_is_a_layout_knob(self):
+        """2-shard and 4-shard meshes agree with each other too (not just
+        with the unsharded service)."""
+        _, two = service_pair("dpf", n_shards=2)
+        _, four = service_pair("dpf", n_shards=4)
+        assert max_gap(collect_service_metrics(two, TICKS),
+                       collect_service_metrics(four, TICKS)) <= 1e-5
+
+    def test_replay_oracle_four_shards(self):
+        factory = functools.partial(ShardedFlaasService, n_shards=4)
+        gaps = replay_gap(small_trace(), 10, SchedulerConfig(beta=2.2),
+                          "dpf", chunk_ticks=5, service_factory=factory,
+                          block_slots_multiple=4)
+        assert max(gaps.values()) <= 1e-5
+
+
+@multi_device
+class TestShardedAdmission:
+    def test_free_slot_allgather_matches_host_ledger(self):
+        """The chunk-boundary census the admission queue consumes must
+        agree with the host ledger mirrors: per-shard live-block counts
+        sum to the global live count, and the free-pipeline figure is the
+        slot table's."""
+        _, svc = service_pair("dpf", n_shards=4)
+        svc.run(12)
+        live, free_pipes = gather_shard_view(svc)
+        assert live.shape == (4,)
+        cap = np.asarray(svc.state.block_capacity)
+        birth = np.asarray(svc.state.block_birth)
+        assert int(live.sum()) == int(((birth >= 0) & (cap > 0.0)).sum())
+        # every shard owns an equal stripe of a fully-wrapped ring
+        assert int(live.max()) <= svc.cfg.block_slots // 4
+        M, N = svc.cfg.analyst_slots, svc.cfg.pipeline_slots
+        assert 0 <= free_pipes <= M * N
+        s = svc.summary()["sharding"]
+        assert s["n_shards"] == 4 and len(s["shard_live_blocks"]) == 4
