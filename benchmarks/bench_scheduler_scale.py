@@ -1,8 +1,9 @@
 """Scheduler scalability: schedule_round wall time across (M analysts x K
 blocks) — the production regime is K ~ 10^4-10^5 live blocks.  Also times
 the Pallas budget kernels (interpret mode on CPU) against their jnp refs,
-the scan-based engine against the legacy host-loop FlaasSimulator, and
-vmapped scenario-fleet scaling (1 -> 64 seeds)."""
+the scan-based engine against the legacy host-loop FlaasSimulator,
+vmapped scenario-fleet scaling (1 -> 64 seeds), and the incremental SP2
+swap engine against the O(N^3 K) reference swap path (``sp2_swap``)."""
 import dataclasses
 
 import jax
@@ -12,7 +13,7 @@ import numpy as np
 from repro.core import (RoundInputs, SchedulerConfig, SimConfig,
                         generate_episode, resolve_fleet_mode, run_episode,
                         run_fleet, run_simulation, schedule_round,
-                        stack_episodes)
+                        stack_episodes, swap_candidate_cap)
 from repro.kernels import ops, ref
 
 from .common import SMALL, derived, time_fn
@@ -33,6 +34,16 @@ ENGINE_SIZES = [
 ]
 if SMALL:
     ENGINE_SIZES = ENGINE_SIZES[:1]
+
+# sp2_swap N sweep: (label, M, K, N, iters, time_reference).  The
+# reference swap path is O(N^3 K) per round — candidates alone grow 64x
+# from N=25 to N=200, so at 8x N only the incremental engine is timed
+# (the reference would take minutes per call on a 2-core CPU).
+SWAP_SIZES = [("small_3x16_K256", 3, 256, 16, 3, True)] if SMALL else [
+    ("paper_6x25_K2000", 6, 2000, 25, 3, True),
+    ("x4_6x100_K500", 6, 500, 100, 2, True),
+    ("x8_6x200_K500", 6, 500, 200, 1, False),
+]
 
 FLEET_SIZES = [1, 8] if SMALL else [1, 8, 64]
 # dispatch-amortization demo scenario: small enough that per-op dispatch
@@ -94,6 +105,59 @@ def _fleet_scaling() -> list:
     return rows
 
 
+def sp2_swap() -> list:
+    """Incremental swap engine (``core/swap.py``) vs the O(N^3 K)
+    reference path: the dpbalance round across the N sweep, plus whole
+    episodes at paper size.  Every row where both engines run carries a
+    ``parity`` flag from bit-comparing their outputs (selection +
+    allocation for rounds, metric trajectories for episodes); the smoke
+    entry point *asserts* it, the section reports it so one bad row
+    cannot kill the harness."""
+    rows = []
+    cfg_inc = SchedulerConfig(beta=2.2)
+    cfg_ref = SchedulerConfig(beta=2.2, incremental_swap=False)
+    for label, M, K, N, iters, time_ref in SWAP_SIZES:
+        rnd = _round(M, K, N)
+        us_i = time_fn(lambda r: schedule_round(r, cfg_inc), rnd,
+                       iters=iters)
+        d = dict(pipelines=M * N, blocks=K, candidates_ref=N * N,
+                 candidates_inc=swap_candidate_cap(N))
+        if time_ref:
+            us_r = time_fn(lambda r: schedule_round(r, cfg_ref), rnd,
+                           iters=1)
+            a, b = schedule_round(rnd, cfg_inc), schedule_round(rnd, cfg_ref)
+            parity = (np.array_equal(np.asarray(a.selected),
+                                     np.asarray(b.selected)) and
+                      np.array_equal(np.asarray(a.x_pipeline),
+                                     np.asarray(b.x_pipeline)))
+            d.update(reference_us=round(us_r, 1),
+                     speedup=round(us_r / us_i, 2), parity=int(parity))
+        else:
+            d.update(reference="skipped")
+        rows.append((f"sp2_swap/round_{label}", us_i, derived(**d)))
+    if not SMALL:
+        # the acceptance row: whole dpbalance episodes, paper geometry —
+        # parity here is cross-round (episode metrics bit-identical), not
+        # just single-round PackResult equality
+        ep = generate_episode(SimConfig(seed=0))
+        out_i = run_episode(ep, cfg_inc, "dpbalance")
+        out_r = run_episode(ep, cfg_ref, "dpbalance")
+        parity = all(np.array_equal(np.asarray(out_i[k]), np.asarray(out_r[k]))
+                     for k in ("round_efficiency", "round_fairness",
+                               "n_allocated", "leftover"))
+        us_i = time_fn(lambda e: run_episode(e, cfg_inc, "dpbalance"), ep,
+                       iters=3)
+        us_r = time_fn(lambda e: run_episode(e, cfg_ref, "dpbalance"), ep,
+                       iters=1)
+        n_rounds = SimConfig().n_rounds
+        rows.append(("sp2_swap/episode_paper_6x25x2000", us_i, derived(
+            reference_us=round(us_r, 1), speedup=round(us_r / us_i, 2),
+            rounds_per_s=round(n_rounds / (us_i * 1e-6), 2),
+            reference_rounds_per_s=round(n_rounds / (us_r * 1e-6), 2),
+            parity=int(parity))))
+    return rows
+
+
 def _round(M, K, N, seed=0):
     rng = np.random.default_rng(seed)
     demand = (rng.uniform(0, 0.05, (M, N, K)) *
@@ -129,6 +193,7 @@ def run() -> list:
                    gamma, lam)
     rows.append((f"budget_kernel/matvec_M{M}_K{K}", us_k, derived(
         jnp_ref_us=round(us_r, 1), flops=2 * M * K)))
+    rows.extend(sp2_swap())
     rows.extend(_engine_vs_legacy())
     rows.extend(_fleet_scaling())
     return rows

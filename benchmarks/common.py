@@ -17,10 +17,12 @@ def run_meta() -> Dict[str, str]:
     the ROADMAP item "pick per-backend fleet defaults from data" can be
     closed from emitted data rather than re-derived by hand."""
     import jax
-    from repro.core import resolve_fleet_mode
+    from repro.core import SchedulerConfig, resolve_fleet_mode
     return {
         "backend": jax.default_backend(),
         "fleet_mode_auto": resolve_fleet_mode("auto"),
+        "swap_engine": ("incremental" if SchedulerConfig().incremental_swap
+                        else "reference"),
         "jax_version": jax.__version__,
         "device_count": str(jax.device_count()),
         "bench_small": str(int(SMALL)),

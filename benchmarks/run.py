@@ -41,6 +41,35 @@ def smoke() -> tuple:
                   file=sys.stderr)
             failures += 1
 
+    # sp2_swap smoke: incremental vs reference swap engine on a tiny round
+    # — parity is asserted, not just reported (the full N sweep lives in
+    # bench_scheduler_scale.sp2_swap).
+    try:
+        import dataclasses
+
+        import numpy as np
+
+        from repro.core import schedule_round
+
+        from .bench_scheduler_scale import _round
+        rnd = _round(3, 64, 8)
+        cfg_ref = dataclasses.replace(cfg, incremental_swap=False)
+        a, b = schedule_round(rnd, cfg), schedule_round(rnd, cfg_ref)
+        if not (np.array_equal(np.asarray(a.selected), np.asarray(b.selected))
+                and np.array_equal(np.asarray(a.x_pipeline),
+                                   np.asarray(b.x_pipeline))):
+            raise AssertionError("swap engine parity violated")
+        us_i = time_fn(lambda r: schedule_round(r, cfg), rnd, iters=2)
+        us_r = time_fn(lambda r: schedule_round(r, cfg_ref), rnd, iters=2)
+        rows.append(("smoke/sp2_swap", us_i, derived(
+            reference_us=round(us_r, 1), speedup=round(us_r / us_i, 2),
+            parity=1)))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/sp2_swap,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
     # service_throughput smoke: a short streaming run with recycling +
     # ledger-ring wrap on the smallest legal ring.
     try:

@@ -7,7 +7,10 @@ from .utility import (alpha_fair_objective, analyst_utility, default_lambda,
                       dominant_efficiency, dominant_fairness, jain_index,
                       platform_utility)
 from .waterfill import WaterfillResult, alpha_fair_waterfill
-from .packing import PackResult, exact_pack, greedy_cover, pack_all, pack_analyst
+from .packing import (PackResult, exact_pack, greedy_cover, pack_all,
+                      pack_analyst, swap_refine, swap_refine_reference)
+from .swap import (swap_candidate_cap, swap_candidate_objectives,
+                   swap_candidates, swap_refine_incremental)
 from .scheduler import RoundResult, SchedulerConfig, schedule_round
 from .baselines import dpf_round, dpk_round, fcfs_round
 from .registry import (SCHEDULER_NAMES, SCHEDULERS, get_round_fn,
@@ -25,7 +28,9 @@ __all__ = [
     "analyst_utility", "default_lambda", "dominant_efficiency",
     "dominant_fairness", "jain_index", "platform_utility", "WaterfillResult",
     "alpha_fair_waterfill", "PackResult", "exact_pack", "greedy_cover",
-    "pack_all", "pack_analyst", "RoundResult", "SchedulerConfig",
+    "pack_all", "pack_analyst", "swap_refine", "swap_refine_reference",
+    "swap_candidate_cap", "swap_candidate_objectives", "swap_candidates",
+    "swap_refine_incremental", "RoundResult", "SchedulerConfig",
     "schedule_round", "dpf_round", "dpk_round", "fcfs_round",
     "SCHEDULER_NAMES", "SCHEDULERS", "get_round_fn", "get_scheduler",
     "Episode", "generate_episode", "resolve_fleet_mode", "run_episode",

@@ -10,7 +10,10 @@ The paper uses a greedy heuristic for Eq 23 and Gurobi for Eq 20.  We use:
 
 * greedy cover by ascending mu_ij (classic max-count packing heuristic),
 * a single-swap refinement pass that keeps the count but may improve the
-  boosted Eq-20 objective (this is what picks Bob's P3 over P4 in Fig 2),
+  boosted Eq-20 objective (this is what picks Bob's P3 over P4 in Fig 2) —
+  by default through the incremental engine in :mod:`repro.core.swap`
+  (exact candidate compaction, bit-identical to the O(N^3 K) reference
+  path kept here as ``swap_refine_reference``),
 * closed-form sequential proportional boost for Eq 20: each selected pipeline
   in descending mu_ij a_ij order receives kappa_j = min_k leftover_k /
   gamma_jk extra, capped at kappa_max.  With a single selected pipeline this
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import swap as _swap
 from .blockaxis import LOCAL, BlockAxis
 
 _EPS = 1e-9
@@ -108,11 +112,15 @@ def _boost_objective(gamma, mu, a, active, sel, budget, kappa_max,
     return obj
 
 
-def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float,
-                block_axis: BlockAxis = LOCAL):
-    """Single-swap local search: for every (selected s, unselected u) try
-    sel - {s} + {u}; keep the feasible candidate with the best boosted
-    objective.  Count is preserved by construction."""
+def swap_refine_reference(gamma, mu, a, active, sel, budget, kappa_max: float,
+                          block_axis: BlockAxis = LOCAL):
+    """Single-swap local search, reference path: for every (selected s,
+    unselected u) try sel - {s} + {u}; keep the feasible candidate with the
+    best boosted objective.  Count is preserved by construction.
+
+    O(N^3 K) per pass — kept as the oracle for the incremental engine in
+    :mod:`repro.core.swap`, which produces bit-identical selections at a
+    quarter of the work (see ``tests/test_swap.py``)."""
     N = mu.shape[0]
     s_idx, u_idx = jnp.meshgrid(jnp.arange(N), jnp.arange(N), indexing="ij")
     s_flat, u_flat = s_idx.reshape(-1), u_idx.reshape(-1)
@@ -137,45 +145,74 @@ def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float,
     return jnp.where(improved, cands[best], sel)
 
 
+def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float,
+                block_axis: BlockAxis = LOCAL, incremental: bool = True):
+    """Single-swap refinement — dispatches to the incremental engine
+    (:func:`repro.core.swap.swap_refine_incremental`, default) or the full
+    O(N^3 K) reference path.  Both return the same selection bit-for-bit."""
+    fn = _swap.swap_refine_incremental if incremental else \
+        swap_refine_reference
+    return fn(gamma, mu, a, active, sel, budget, kappa_max, block_axis)
+
+
 @functools.partial(jax.jit, static_argnames=("kappa_max", "refine",
-                                             "block_axis"))
+                                             "incremental", "block_axis"))
 def pack_analyst(gamma, mu, a, active, budget, kappa_max: float = 8.0,
-                 refine: bool = True,
+                 refine: bool = True, incremental: bool = True,
                  block_axis: BlockAxis = LOCAL) -> PackResult:
     """Full SP2 for one analyst.  vmap over analysts for the batched version."""
     sel = greedy_cover(gamma, mu, active, budget, block_axis)
     if refine:
         sel = swap_refine(gamma, mu, a, active, sel, budget, kappa_max,
-                          block_axis)
+                          block_axis, incremental)
     x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget,
                                       kappa_max, block_axis)
     return PackResult(x_ij=x, selected=sel, used=used, objective=obj)
 
 
-pack_all = jax.vmap(pack_analyst, in_axes=(0, 0, 0, 0, 0, None, None, None),
+pack_all = jax.vmap(pack_analyst,
+                    in_axes=(0, 0, 0, 0, 0, None, None, None, None),
                     out_axes=0)
 
 
+@functools.partial(jax.jit, static_argnames=("kappa_max",))
+def _batched_boost_objective(gamma, mu, a, active, sels, budget,
+                             kappa_max: float):
+    """[S, N] selection matrix -> [S] boosted objectives (one compile per
+    shape — what makes the exhaustive oracle usable at N = 10 in tests)."""
+    return jax.vmap(
+        lambda s: proportional_boost(gamma, mu, a, active, s, budget,
+                                     kappa_max)[2])(sels)
+
+
 def exact_pack(gamma, mu, a, active, budget, kappa_max: float = 8.0):
-    """Exhaustive oracle for tests (N <= 20): enumerate subsets, maximize
-    count then boosted objective (boost via the same sequential heuristic)."""
+    """Exhaustive oracle for tests (N <= 16): enumerate subsets, maximize
+    count then boosted objective (boost via the same sequential heuristic).
+    Ties resolve to the lowest subset bitmask, matching the original
+    sequential enumeration."""
     gamma, mu, a = map(np.asarray, (gamma, mu, a))
     active, budget = np.asarray(active), np.asarray(budget)
     N = mu.shape[0]
-    idxs = [j for j in range(N) if active[j]]
-    best = (0, -np.inf, np.zeros(N, bool))
-    for bits in range(1 << len(idxs)):
-        sel = np.zeros(N, bool)
-        for p, j in enumerate(idxs):
-            if bits >> p & 1:
-                sel[j] = True
-        used = (gamma * sel[:, None]).sum(0)
-        if np.any(used > budget + 1e-6):
-            continue
-        x, _, obj = proportional_boost(
-            jnp.asarray(gamma), jnp.asarray(mu), jnp.asarray(a),
-            jnp.asarray(active), jnp.asarray(sel), jnp.asarray(budget), kappa_max)
-        cand = (int(sel.sum()), float(obj), sel)
-        if (cand[0], cand[1]) > (best[0], best[1]):
-            best = cand
-    return best[2], best[0], best[1]
+    idxs = np.flatnonzero(active)
+    n = idxs.size
+    if n > 16:
+        raise ValueError(f"exact_pack enumerates 2^{n} subsets; N_active "
+                         "must be <= 16")
+    bits = np.arange(1 << n)
+    sels = np.zeros((1 << n, N), bool)
+    sels[:, idxs] = (bits[:, None] >> np.arange(n)) & 1
+    used = sels.astype(gamma.dtype) @ gamma                       # [S, K]
+    feasible = (used <= budget + _FEAS).all(axis=1)
+    objs = np.asarray(_batched_boost_objective(
+        jnp.asarray(gamma), jnp.asarray(mu), jnp.asarray(a),
+        jnp.asarray(active), jnp.asarray(sels), jnp.asarray(budget),
+        kappa_max), np.float64)
+    counts = sels.sum(axis=1)
+    key = np.where(feasible, counts * 1.0, -1.0)
+    best_count = int(key.max())
+    if best_count < 0:                       # no feasible subset (can't
+        return np.zeros(N, bool), 0, -np.inf  # happen: empty set is feasible)
+    cand = feasible & (counts == best_count)
+    best_obj = objs[cand].max()
+    best = int(np.flatnonzero(cand & (objs >= best_obj))[0])
+    return sels[best], best_count, float(objs[best])

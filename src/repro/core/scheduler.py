@@ -38,6 +38,9 @@ class SchedulerConfig:
                                     # cross-round; large kappa starves later rounds)
     weighted_constraints: bool = False  # paper's literal Eq 14 (see DESIGN §8)
     refine: bool = True             # SP2 single-swap refinement
+    incremental_swap: bool = True   # compacted swap engine (core/swap.py);
+                                    # False = O(N^3 K) reference path,
+                                    # bit-identical selections either way
     solver_iters: int = 4000
     solver_tol: float = 1e-6
     use_pallas: bool = False        # [M,K] hot-path sweeps via Pallas kernels
@@ -94,7 +97,8 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
     T_ij = dm.waiting_coefficient(rnd.arrival, rnd.now, cfg.tau)
     a_ij = T_ij * rnd.loss
     pack = pack_all(gamma, mu_ij, a_ij, active, budget_i,
-                    cfg.kappa_max, cfg.refine, block_axis)
+                    cfg.kappa_max, cfg.refine, cfg.incremental_swap,
+                    block_axis)
 
     x_ij = pack.x_ij
     grants = rnd.demand * x_ij[..., None]             # epsilon units

@@ -127,6 +127,37 @@ class TestPacking:
             if got == best_count and best_obj > 0:
                 assert float(res.objective) >= 0.75 * best_obj - 1e-6
 
+    def test_small_n_oracle_matrix(self):
+        """50 seeded instances at N <= 10 pin greedy+swap against the
+        exhaustive oracle: the count is optimal or one off, and whenever
+        the count is optimal the boosted objective is within 30% of the
+        oracle's (the stated optimality gap).  Sizes are drawn from a
+        fixed grid so the jit cache holds a handful of shapes."""
+        sizes = [(4, 3), (6, 3), (8, 3), (10, 3)]
+        optimal_count = 0
+        for seed in range(50):
+            r = np.random.default_rng(100 + seed)
+            N, K = sizes[seed % len(sizes)]
+            gamma = (r.uniform(0, 0.4, (N, K)) *
+                     (r.random((N, K)) > 0.3)).astype(np.float32)
+            mu = np.maximum(gamma.max(1), 1e-4).astype(np.float32)
+            a = r.uniform(0.3, 1.0, N).astype(np.float32)
+            active = gamma.sum(1) > 0
+            budget = r.uniform(0.2, 0.8, K).astype(np.float32)
+            res = pack_analyst(jnp.asarray(gamma), jnp.asarray(mu),
+                               jnp.asarray(a), jnp.asarray(active),
+                               jnp.asarray(budget), 2.0, True)
+            _, best_count, best_obj = exact_pack(gamma, mu, a, active,
+                                                 budget, 2.0)
+            got = int(res.selected.sum())
+            assert got >= best_count - 1, seed
+            if got == best_count:
+                optimal_count += 1
+                if best_obj > 0:
+                    assert float(res.objective) >= 0.70 * best_obj - 1e-6, \
+                        seed
+        assert optimal_count >= 35   # the -1 cases are the rare exception
+
     def test_one_or_more(self):
         res = schedule_round(fig2_round(), SchedulerConfig(beta=2.2))
         x = np.asarray(res.x_pipeline)

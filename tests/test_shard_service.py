@@ -39,9 +39,11 @@ def small_trace(scenario="paper_default", seed=2):
     return make_trace(scenario, "poisson", seed=seed, **SIZE)
 
 
-def service_pair(scheduler, scenario="paper_default", n_shards=1, seed=2):
+def service_pair(scheduler, scenario="paper_default", n_shards=1, seed=2,
+                 sched=None):
     trace = small_trace(scenario, seed)
-    cfg = ServiceConfig(scheduler=scheduler, sched=SchedulerConfig(beta=2.2),
+    cfg = ServiceConfig(scheduler=scheduler,
+                        sched=sched or SchedulerConfig(beta=2.2),
                         analyst_slots=3, pipeline_slots=6, block_slots=RING,
                         chunk_ticks=4, admit_batch=8, max_pending=64)
     return (FlaasService(cfg, trace.reset()),
@@ -181,6 +183,47 @@ class TestMultiShardParity:
                           "dpf", chunk_ticks=5, service_factory=factory,
                           block_slots_multiple=4)
         assert max(gaps.values()) <= 1e-5
+
+
+class TestIncrementalSwapShardParity:
+    """The incremental SP2 swap engine through the sharded service: the
+    1-shard-exact / 4-shard-<=1e-5 matrix must hold with
+    ``incremental_swap=True`` (the default), ring wrap included — and the
+    two swap engines must agree with each other across the service plane."""
+
+    INC = SchedulerConfig(beta=2.2, incremental_swap=True)
+    REF = SchedulerConfig(beta=2.2, incremental_swap=False)
+
+    def test_plain_service_engines_bitwise_through_wrap(self):
+        """Cross-engine, same plane: the service tick loop is bit-identical
+        under either swap engine, through a ring wrap."""
+        inc, _ = service_pair("dpbalance", sched=self.INC)
+        ref, _ = service_pair("dpbalance", sched=self.REF)
+        ya = collect_service_metrics(inc, TICKS)
+        yb = collect_service_metrics(ref, TICKS)
+        for k in METRICS:
+            np.testing.assert_array_equal(np.asarray(ya[k]),
+                                          np.asarray(yb[k]), err_msg=k)
+
+    def test_one_shard_incremental_matches_reference_plain(self):
+        """Cross-engine AND cross-plane: sharded(incremental, 1 shard) vs
+        plain(reference), ring wrapped."""
+        plain, _ = service_pair("dpbalance", sched=self.REF)
+        _, sharded = service_pair("dpbalance", sched=self.INC)
+        assert max_gap(collect_service_metrics(plain, TICKS),
+                       collect_service_metrics(sharded, TICKS)) <= 1e-5
+
+    @multi_device
+    @pytest.mark.parametrize("scenario", PARITY_SCENARIOS)
+    def test_four_shards_incremental_vs_reference_plain(self, scenario):
+        plain, _ = service_pair("dpbalance", scenario, sched=self.REF)
+        _, sharded = service_pair("dpbalance", scenario, n_shards=4,
+                                  sched=self.INC)
+        ya = collect_service_metrics(plain, TICKS)
+        yb = collect_service_metrics(sharded, TICKS)
+        # ring wrapped on every shard stripe
+        assert int(np.asarray(sharded.state.block_birth).min()) >= TICKS - 10
+        assert max_gap(ya, yb) <= 1e-5
 
 
 @multi_device

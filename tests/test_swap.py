@@ -1,0 +1,244 @@
+"""Differential harness for the incremental SP2 swap engine.
+
+``repro.core.swap`` must be *bitwise* exchangeable with the reference
+single-swap path: candidate objectives equal a full ``proportional_boost``
+recompute bit-for-bit, refined selections match ``swap_refine_reference``
+including argmax tie resolution, ``pack_analyst`` returns an identical
+``PackResult``, and all four schedulers' first rounds are unchanged across
+the 9-scenario catalog.  Also pins the *negative* result the engine's
+design rests on: naive prefix-reuse (checkpoint + rank-1 leftover
+adjustment, suffix-only re-evaluation) is NOT exact.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SCENARIOS, SCHEDULER_NAMES, RoundInputs,
+                        SchedulerConfig, generate_episode, get_scheduler,
+                        pack_analyst, scenario_config,
+                        swap_candidate_cap, swap_candidate_objectives,
+                        swap_candidates, swap_refine_incremental,
+                        swap_refine_reference)
+from repro.core.engine import ROUND_SECONDS
+from repro.core.packing import greedy_cover, proportional_boost
+
+KAPPAS = (2.0, 8.0)
+
+
+def make_instance(seed, n_lo=4, n_hi=14, k_lo=2, k_hi=7):
+    """Randomized (gamma, mu, a, active, budget) with the degenerate rows
+    the engine must handle: all-zero gamma rows kept active (inf water
+    level -> kappa-capped boost), inactive pipelines, duplicated rows
+    (argmax ties), and generous budgets (every boost kappa-capped)."""
+    r = np.random.default_rng(seed)
+    N, K = int(r.integers(n_lo, n_hi)), int(r.integers(k_lo, k_hi))
+    gamma = (r.uniform(0, 0.4, (N, K)) *
+             (r.random((N, K)) > 0.3)).astype(np.float32)
+    active = gamma.sum(1) > 0
+    if seed % 4 == 0:                   # all-zero demand row, still active
+        gamma[0] = 0.0
+        active[0] = True
+    if seed % 3 == 0 and N > 2:         # inactive pipeline with demand
+        active[1] = False
+    if seed % 5 == 0 and N > 3:         # duplicated rows -> objective ties
+        gamma[2] = gamma[3]
+    mu = np.maximum(gamma.max(1), 1e-4).astype(np.float32)
+    a = r.uniform(0.3, 1.0, N).astype(np.float32)
+    if seed % 5 == 0 and N > 3:
+        mu[2], a[2] = mu[3], a[3]
+    budget = (np.full(K, 10.0, np.float32) if seed % 6 == 0   # kappa-capped
+              else r.uniform(0.2, 0.9, K).astype(np.float32))
+    return tuple(map(jnp.asarray, (gamma, mu, a, active, budget)))
+
+
+def random_selection(seed, active):
+    """A random (not necessarily greedy, not necessarily feasible)
+    selection — both engines must agree on arbitrary inputs."""
+    r = np.random.default_rng(seed + 10_000)
+    sel = (r.random(active.shape[0]) < 0.4) & np.asarray(active)
+    return jnp.asarray(sel)
+
+
+class TestCandidateSet:
+    def test_cap_bound(self):
+        for n in (1, 2, 5, 24, 25):
+            cap = swap_candidate_cap(n)
+            assert cap == max((n * n) // 4, 1)
+            for m in range(n + 1):
+                assert m * (n - m) <= cap
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_compaction_keeps_every_valid_candidate_in_order(self, seed):
+        gamma, mu, a, active, budget = make_instance(seed)
+        sel = greedy_cover(gamma, mu, active, budget)
+        s_c, u_c, valid_c = map(np.asarray, swap_candidates(sel, active))
+        sel_np, act_np = np.asarray(sel), np.asarray(active)
+        N = sel_np.shape[0]
+        ref = [(s, u) for s in range(N) for u in range(N)
+               if sel_np[s] and not sel_np[u] and act_np[u] and s != u]
+        got = [(int(s), int(u)) for s, u, v in zip(s_c, u_c, valid_c) if v]
+        assert got == ref                       # complete AND order-preserving
+        assert len(s_c) == swap_candidate_cap(N)
+
+
+class TestDifferential:
+    """The randomized differential matrix of the issue: incremental ==
+    reference bit-for-bit, objectives included."""
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_candidate_objectives_match_full_recompute_bitwise(self, seed):
+        gamma, mu, a, active, budget = make_instance(seed)
+        sel = greedy_cover(gamma, mu, active, budget)
+        for kappa in KAPPAS:
+            cands, objs, valid = swap_candidate_objectives(
+                gamma, mu, a, active, sel, budget, kappa)
+            cands, objs, valid = map(np.asarray, (cands, objs, valid))
+            for i in np.flatnonzero(valid):
+                _, _, full = proportional_boost(
+                    gamma, mu, a, active, jnp.asarray(cands[i]), budget,
+                    kappa)
+                assert float(full) == objs[i], (seed, kappa, i)
+            # vacuity guard: whenever a swap candidate is *clearly*
+            # feasible (1e-3 margin, far above the float fuzz around
+            # _FEAS), the engine must have marked at least one valid.
+            sel_np, act_np = np.asarray(sel), np.asarray(active)
+            g_np, b_np = np.asarray(gamma), np.asarray(budget)
+            clearly_feasible = any(
+                (((g_np * np.where(
+                    np.arange(len(sel_np)) == u, True,
+                    np.where(np.arange(len(sel_np)) == s, False,
+                             sel_np))[:, None]).sum(0)) <= b_np - 1e-3).all()
+                for s in np.flatnonzero(sel_np)
+                for u in np.flatnonzero(~sel_np & act_np) if s != u)
+            if clearly_feasible:
+                assert valid.any(), (seed, kappa)
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_refined_selection_matches_reference_bitwise(self, seed):
+        gamma, mu, a, active, budget = make_instance(seed)
+        for sel in (greedy_cover(gamma, mu, active, budget),
+                    random_selection(seed, active)):
+            for kappa in KAPPAS:
+                got = swap_refine_incremental(gamma, mu, a, active, sel,
+                                              budget, kappa)
+                ref = swap_refine_reference(gamma, mu, a, active, sel,
+                                            budget, kappa)
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(ref))
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_pack_analyst_bitwise_identical(self, seed):
+        gamma, mu, a, active, budget = make_instance(seed)
+        for kappa in KAPPAS:
+            inc = pack_analyst(gamma, mu, a, active, budget, kappa, True,
+                               True)
+            ref = pack_analyst(gamma, mu, a, active, budget, kappa, True,
+                               False)
+            for fa, fb, name in zip(inc, ref, inc._fields):
+                assert np.array_equal(np.asarray(fa), np.asarray(fb)), \
+                    (seed, kappa, name)
+
+
+def first_round_inputs(ep):
+    """RoundInputs of round 0, mirroring the engine scan body."""
+    f32 = ep.demand.dtype
+    created = ep.block_round <= 0
+    capacity = ep.block_budget * (ep.block_round == 0)
+    budget_total = jnp.where(created, ep.block_budget, 1.0)
+    active = jnp.broadcast_to((ep.spawn_round <= 0)[:, None],
+                              ep.demand.shape[:2])
+    return RoundInputs(
+        demand=ep.demand * active[..., None].astype(f32),
+        active=active,
+        arrival=jnp.where(active, ep.arrival, 0.0),
+        loss=jnp.where(active, ep.loss, 1.0),
+        capacity=capacity, budget_total=budget_total,
+        now=jnp.asarray(0.0, f32) * ROUND_SECONDS)
+
+
+class TestSchedulerMatrix:
+    """All 9 scenarios x all 4 schedulers: the first round's RoundResult is
+    identical under the incremental and reference swap engines (baselines
+    never pack, so they pin the config plumbing; dpbalance pins the
+    engine)."""
+
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    def test_first_round_identical(self, scenario):
+        ep = generate_episode(scenario_config(
+            scenario, seed=0, n_devices=4, pipelines_per_analyst=8,
+            n_rounds=4))
+        rnd = first_round_inputs(ep)
+        cfg_inc = SchedulerConfig(beta=2.2)
+        cfg_ref = dataclasses.replace(cfg_inc, incremental_swap=False)
+        for name in SCHEDULER_NAMES:
+            fn = get_scheduler(name)
+            inc, ref = fn(rnd, cfg_inc), fn(rnd, cfg_ref)
+            for fa, fb, field in zip(inc, ref, inc._fields):
+                assert np.array_equal(np.asarray(fa), np.asarray(fb)), \
+                    (scenario, name, field)
+
+
+class TestPrefixReuseIsInexact:
+    """Documents the negative result the engine's design rests on.
+
+    The naive incremental idea — checkpoint the base boost scan's leftover
+    at each step, then re-evaluate a candidate only over the suffix from
+    ``min(pos(s), pos(u))`` with leftover adjusted by the rank-1 delta
+    ``gamma[s] - gamma[u]`` — silently assumes the *prefix* boosts are
+    selection-independent.  They are not: the delta shifts the initial
+    leftover, and any prefix boost that is water-limited (not kappa-capped)
+    changes with it.  This instance makes the naive scheme disagree with
+    the true objective, which is why ``repro.core.swap`` compacts the
+    candidate set instead of truncating the scan.
+    """
+
+    def _instance(self):
+        # One block; fixed descending mu*a order = [P0, P1, P2].
+        gamma = jnp.asarray([[0.4], [0.3], [0.1]], jnp.float32)
+        mu = jnp.asarray([0.4, 0.3, 0.1], jnp.float32)
+        a = jnp.asarray([1.0, 1.0, 0.5], jnp.float32)
+        active = jnp.ones(3, bool)
+        sel = jnp.asarray([True, True, False])
+        budget = jnp.ones(1, jnp.float32)
+        return gamma, mu, a, active, sel, budget, 2.0
+
+    def test_naive_prefix_reuse_disagrees(self):
+        gamma, mu, a, active, sel, budget, kappa = self._instance()
+        # base scan with per-step leftover checkpoints (order is identity
+        # here: mu*a already descending)
+        leftover = float(budget[0] - (0.4 + 0.3))          # 0.3
+        checkpoints = []
+        extras_base = []
+        for j in range(3):
+            checkpoints.append(leftover)
+            extra = 0.0
+            if bool(sel[j]):
+                extra = min(max(leftover / float(gamma[j, 0]), 0.0),
+                            kappa - 1.0)
+            extras_base.append(extra)
+            leftover -= extra * float(gamma[j, 0])
+        # candidate: drop s=P1, add u=P2 -> suffix starts at p_min=1
+        cand = jnp.asarray([True, False, True])
+        left_naive = checkpoints[1] + float(gamma[1, 0] - gamma[2, 0])
+        naive_obj = float(mu[0] * a[0]) * (1.0 + extras_base[0])  # reused
+        for j in (1, 2):
+            extra = 0.0
+            if bool(cand[j]):
+                extra = min(max(left_naive / float(gamma[j, 0]), 0.0),
+                            kappa - 1.0)
+                left_naive -= extra * float(gamma[j, 0])
+            naive_obj += float(mu[j] * a[j]) * (1.0 + extra) * bool(cand[j])
+        _, _, true_obj = proportional_boost(gamma, mu, a, active, cand,
+                                            budget, kappa)
+        # the prefix boost of P0 is water-limited, so the naive scheme is
+        # wrong by a macroscopic margin here (0.8 vs 0.9)
+        assert abs(naive_obj - float(true_obj)) > 0.05
+        # ... while the incremental engine is exact on the same candidate
+        cands, objs, valid = swap_candidate_objectives(
+            gamma, mu, a, active, sel, budget, kappa)
+        i = int(np.flatnonzero((np.asarray(cands) ==
+                                np.asarray(cand)).all(1))[0])
+        assert bool(np.asarray(valid)[i])
+        assert float(np.asarray(objs)[i]) == float(true_obj)

@@ -1,0 +1,81 @@
+"""Hypothesis property tests for SP2 swap-refinement invariants.
+
+Optional-dep-safe (same pattern as ``test_properties.py``): the module
+skips itself when ``hypothesis`` is missing, so tier-1 collects and runs
+without it.  Invariants, for BOTH swap engines:
+
+* refinement never reduces the pipeline count (single-swap preserves it);
+* the packed allocation is never infeasible: ``used <= budget + _FEAS``;
+* refinement never lowers the boosted objective vs the unrefined greedy
+  cover.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests require hypothesis")
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import pack_analyst, swap_refine_incremental
+from repro.core.packing import (_FEAS, greedy_cover, proportional_boost,
+                                swap_refine_reference)
+
+ENGINES = {"incremental": swap_refine_incremental,
+           "reference": swap_refine_reference}
+
+
+def _instance(draw):
+    N = draw(st.integers(3, 10))
+    K = draw(st.integers(1, 5))
+    vals = draw(st.lists(st.floats(0.0, 0.4), min_size=N * K,
+                         max_size=N * K))
+    gamma = np.asarray(vals, np.float32).reshape(N, K)
+    zero_row = draw(st.integers(-1, N - 1))
+    if zero_row >= 0:                      # degenerate: zero-demand row
+        gamma[zero_row] = 0.0
+    active = np.ones(N, bool)
+    inactive = draw(st.integers(-1, N - 1))
+    if inactive >= 0:
+        active[inactive] = False
+    mu = np.maximum(gamma.max(1), 1e-4).astype(np.float32)
+    a_vals = draw(st.lists(st.floats(0.1, 1.0), min_size=N, max_size=N))
+    a = np.asarray(a_vals, np.float32)
+    b_vals = draw(st.lists(st.floats(0.1, 1.2), min_size=K, max_size=K))
+    budget = np.asarray(b_vals, np.float32)
+    kappa = draw(st.sampled_from([2.0, 8.0]))
+    return tuple(map(jnp.asarray, (gamma, mu, a, active, budget))) + (kappa,)
+
+
+@given(st.data())
+def test_swap_never_reduces_count(data):
+    gamma, mu, a, active, budget, kappa = _instance(data.draw)
+    sel = greedy_cover(gamma, mu, active, budget)
+    n0 = int(np.asarray(sel).sum())
+    for name, engine in ENGINES.items():
+        refined = engine(gamma, mu, a, active, sel, budget, kappa)
+        assert int(np.asarray(refined).sum()) >= n0, name
+        assert int(np.asarray(refined).sum()) == n0, name  # swap preserves
+
+
+@given(st.data())
+def test_pack_never_infeasible(data):
+    gamma, mu, a, active, budget, kappa = _instance(data.draw)
+    for incremental in (True, False):
+        res = pack_analyst(gamma, mu, a, active, budget, kappa, True,
+                           incremental)
+        used = np.asarray(res.used)
+        assert (used <= np.asarray(budget) + _FEAS).all(), incremental
+
+
+@given(st.data())
+def test_swap_never_lowers_boosted_objective(data):
+    gamma, mu, a, active, budget, kappa = _instance(data.draw)
+    sel = greedy_cover(gamma, mu, active, budget)
+    _, _, obj_greedy = proportional_boost(gamma, mu, a, active, sel, budget,
+                                          kappa)
+    for name, engine in ENGINES.items():
+        refined = engine(gamma, mu, a, active, sel, budget, kappa)
+        _, _, obj = proportional_boost(gamma, mu, a, active, refined,
+                                       budget, kappa)
+        assert float(obj) >= float(obj_greedy) - 1e-9, name
