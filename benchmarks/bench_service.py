@@ -10,6 +10,11 @@ Four question groups:
 * **service tick vs engine round at paper size**: the acceptance bar — the
   chunked tick loop must sustain at least the engine's rounds/sec on the
   paper's §VI geometry (host sync only at chunk boundaries);
+* **steady-state wrapped tick** (``steady_state_paged``): the long-running
+  regime — the ring retires a slot every tick.  The paged two-ring layout
+  keeps demand out of the scan carry (see ``docs/service.md``); the row
+  pins the wrapped-tick/engine-round ratio for the paged body next to the
+  full-tensor-carry fallback, with parity asserted between the two;
 * **shard throughput** (:func:`shard_throughput`): the sharded service
   plane's shard-count sweep at paper size and at 8x the paper's block
   count (ledger striped over a device mesh; see ``docs/sharding.md``).
@@ -71,7 +76,7 @@ def _interleaved_min(fn_a, fn_b, iters: int = 7):
 def _timed_run(make, ticks: int, iters: int = 3):
     """(best wall seconds, summary) over ``iters`` fresh service runs; one
     warmup run first so jit compilation is excluded (the compiled chunk is
-    cached process-wide by (scheduler, cfg, chunk, retire))."""
+    cached process-wide by (scheduler, cfg, chunk, mode))."""
     make().run(ticks)
     best = float("inf")
     for _ in range(iters):
@@ -178,6 +183,68 @@ def _vs_engine_paper_size() -> list:
     return rows
 
 
+def _steady_state_paged() -> list:
+    """Wrapped-tick cost at paper size ([6, 25, 2000] shapes): the
+    compiled retire-chunk tick loop — paged two-ring layout vs the
+    full-tensor-carry fallback — against the engine round.
+
+    The service is advanced past the first ring wrap (so every subsequent
+    chunk retires slots), then the pure compiled wrapped chunk is timed
+    exactly like ``tick_loop``: boundary work excluded, interleaved
+    min-of-N against the engine and the carry body so clock drift hits
+    all three equally.  Bitwise parity between the paged and carry
+    chunks over the same state is checked and reported in the row
+    (``parity=1``); the hard assertion lives in ``--smoke`` and
+    ``tests/test_paging.py``."""
+    import numpy as np
+
+    rows = []
+    sim = SimConfig(seed=0)
+    R = sim.n_rounds
+    B = sim.n_devices * sim.blocks_per_round_per_device * R
+    chunk = R // 2                 # hot window = half the ring per chunk
+    ep = generate_episode(sim)
+    scheds = ("dpf",) if SMALL else ("dpf", "dpbalance")
+    for s in scheds:
+        cfg = SchedulerConfig(beta=2.2)
+        trace = make_trace("paper_default", "poisson",
+                           seed=0).precompute(6 * R)
+
+        def wrapped(paged):
+            svc = FlaasService(ServiceConfig(
+                scheduler=s, sched=cfg, analyst_slots=sim.n_analysts,
+                pipeline_slots=sim.pipelines_per_analyst, block_slots=B,
+                chunk_ticks=chunk, admit_batch=16, max_pending=256,
+                validate=False, paged=paged), trace.reset())
+            while int(svc.state.tick) * trace.blocks_per_tick < B:
+                svc.run_chunk(chunk)   # advance past the first wrap
+            svc.admit_boundary(chunk)
+            return svc.tick_loop_fn(chunk)
+
+        loop_paged, loop_carry = wrapped(True), wrapped(False)
+        engine = lambda: run_episode(ep, cfg, s, validate=False)
+        # parity over the identical state: the paged body is bit-exact
+        ya = jax.tree.map(np.asarray, loop_paged()[1])
+        yb = jax.tree.map(np.asarray, loop_carry()[1])
+        parity = all(np.array_equal(ya[k], yb[k])
+                     for k in ("round_efficiency", "n_allocated",
+                               "leftover", "selected"))
+        us_p, us_e = _interleaved_min(loop_paged, engine, iters=7)
+        us_c, _ = _interleaved_min(loop_carry, engine, iters=3)
+        engine_round = us_e / R
+        rows.append((f"service_throughput/steady_state_paged/{s}",
+                     us_p / chunk, derived(
+                         wrapped_tick_us=round(us_p / chunk, 1),
+                         carry_tick_us=round(us_c / chunk, 1),
+                         engine_round_us=round(engine_round, 1),
+                         ratio=round((us_p / chunk) / engine_round, 3),
+                         carry_ratio=round((us_c / chunk) / engine_round, 3),
+                         hot_fraction=round(chunk * trace.blocks_per_tick
+                                            / B, 2),
+                         parity=int(parity))))
+    return rows
+
+
 def shard_throughput() -> list:
     """Shard-count sweep of :class:`ShardedFlaasService` — paper geometry
     (B = 2000 ring) and an 8x-block-count geometry (B = 16000: beyond one
@@ -229,4 +296,4 @@ def shard_throughput() -> list:
 
 def run() -> list:
     return (_chunk_sweep() + _queue_pressure() + _vs_engine_paper_size() +
-            shard_throughput())
+            _steady_state_paged() + shard_throughput())

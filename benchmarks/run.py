@@ -12,6 +12,7 @@ points importable and runnable).
 """
 import argparse
 import sys
+import time
 import traceback
 
 
@@ -88,6 +89,42 @@ def smoke() -> tuple:
     except Exception as e:
         traceback.print_exc()
         print(f"smoke/service_dpf,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
+    # steady_state_paged smoke: a ring-wrapping run with the paged
+    # two-ring demand layout vs the full-tensor-carry fallback — bitwise
+    # parity is ASSERTED (per-tick metrics over >= 2 wraps), speedup
+    # reported.
+    try:
+        import numpy as np
+
+        from repro.service import collect_service_metrics
+
+        trace = make_trace("paper_default", "bursty", seed=0, n_devices=4,
+                           pipelines_per_analyst=6).precompute(24)
+        def paged_svc(paged):
+            return FlaasService(ServiceConfig(
+                scheduler="dpf", sched=cfg, analyst_slots=4,
+                pipeline_slots=6, block_slots=10 * trace.blocks_per_tick,
+                chunk_ticks=4, admit_batch=8, max_pending=32,
+                paged=paged), trace.reset())
+        t0 = time.perf_counter()
+        ya = collect_service_metrics(paged_svc(True), 24)
+        us_paged = (time.perf_counter() - t0) * 1e6 / 24
+        t0 = time.perf_counter()
+        yb = collect_service_metrics(paged_svc(False), 24)
+        us_carry = (time.perf_counter() - t0) * 1e6 / 24
+        for k in ("round_efficiency", "n_allocated", "leftover"):
+            if not np.array_equal(np.asarray(ya[k]), np.asarray(yb[k])):
+                raise AssertionError(
+                    f"paged/carry parity violated on {k!r}")
+        rows.append(("smoke/service_paged", us_paged, derived(
+            carry_us=round(us_carry, 1),
+            speedup=round(us_carry / us_paged, 2), parity=1)))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/service_paged,NaN,error={type(e).__name__}",
               file=sys.stderr)
         failures += 1
 

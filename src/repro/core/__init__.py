@@ -1,6 +1,6 @@
 """DPBalance core — the paper's contribution as a composable JAX module."""
-from .blockaxis import LOCAL, BlockAxis
-from .demand import (AnalystView, RoundInputs, analyst_demand,
+from .blockaxis import LOCAL, BlockAxis, grant_fits_scan
+from .demand import (AnalystView, DemandView, RoundInputs, analyst_demand,
                      analyst_max_share, normalized_demand,
                      pipeline_max_share)
 from .utility import (alpha_fair_objective, analyst_utility, default_lambda,
@@ -22,8 +22,9 @@ from .scenarios import (SCENARIOS, get_scenario, make_fleet,
 from .simulation import FlaasSimulator, SimConfig, run_simulation
 
 __all__ = [
-    "LOCAL", "BlockAxis",
-    "AnalystView", "RoundInputs", "analyst_demand", "analyst_max_share",
+    "LOCAL", "BlockAxis", "grant_fits_scan",
+    "AnalystView", "DemandView", "RoundInputs", "analyst_demand",
+    "analyst_max_share",
     "normalized_demand", "pipeline_max_share", "alpha_fair_objective",
     "analyst_utility", "default_lambda", "dominant_efficiency",
     "dominant_fairness", "jain_index", "platform_utility", "WaterfillResult",

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from . import demand as dm
 from . import utility as ut
-from .blockaxis import LOCAL, BlockAxis
+from .blockaxis import LOCAL, BlockAxis, grant_fits_scan
 from .scheduler import RoundResult, SchedulerConfig
 
 _EPS = 1e-9
@@ -33,9 +33,11 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn,
     """Flatten pipelines, sort by key_fn ascending, grant-if-fits scan.
 
     Sharded ``block_axis``: the sort key is reduced across shards first so
-    the visit order is identical everywhere; the grant-if-fits scan then
-    keeps per-block remaining capacity shard-local with one cross-shard
-    AND per visited pipeline."""
+    the visit order is identical everywhere; the grant-if-fits sweep runs
+    through :func:`~repro.core.blockaxis.grant_fits_scan`, which keeps
+    per-block remaining capacity shard-local and batches the cross-shard
+    fits-check ANDs into one segmented collective per refinement instead
+    of one per visited pipeline."""
     M, N, K = rnd.demand.shape
     gamma = dm.normalized_demand(rnd.demand, rnd.budget_total)
     mu_ij = dm.pipeline_max_share(gamma, block_axis)
@@ -51,13 +53,7 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn,
     g_ord = gamma.reshape(M * N, K)[order]
     a_ord = active.reshape(-1)[order]
 
-    def step(remaining, xs):
-        dem, act = xs
-        ok = act & block_axis.all(jnp.all(dem <= remaining + _FEAS))
-        remaining = jnp.where(ok, remaining - dem, remaining)
-        return remaining, ok
-
-    _, taken = jax.lax.scan(step, cap_frac, (g_ord, a_ord))
+    _, taken = grant_fits_scan(g_ord, a_ord, cap_frac, _FEAS, block_axis)
     sel = jnp.zeros((M * N,), bool).at[order].set(taken).reshape(M, N)
     x_ij = sel.astype(gamma.dtype)
 

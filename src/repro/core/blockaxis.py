@@ -33,10 +33,15 @@ class BlockAxis:
     """Reduction hooks over the (possibly sharded) block axis.
 
     ``name`` is the mesh axis the block dimension is sharded over, or None
-    for the single-device layout.
+    for the single-device layout.  ``fits_segment`` sizes the visit
+    segments of :func:`grant_fits_scan` — the sharded sequential-grant
+    sweeps batch their cross-shard fits-checks into one collective per
+    segment refinement instead of one per visited pipeline (ignored on the
+    local layout, where the per-step check is free).
     """
 
     name: Optional[str] = None
+    fits_segment: int = 8
 
     @property
     def sharded(self) -> bool:
@@ -66,3 +71,88 @@ class BlockAxis:
 
 
 LOCAL = BlockAxis(None)
+
+
+def grant_fits_scan(dems, act, remaining, feas,
+                    block_axis: BlockAxis = LOCAL):
+    """Sequential grant-if-fits sweep over pre-ordered visits.
+
+    ``dems [V, K]`` are the visits' (local-stripe) demand rows, ``act [V]``
+    their activity mask, ``remaining [K]`` the local remaining capacity.
+    Returns ``(remaining_after, taken [V] bool)`` with, in visit order,
+
+        taken_v = act_v  AND  all_k dem_vk <= remaining_k + feas   (global k)
+        remaining -= dem_v                                     where taken_v.
+
+    This is THE fits-check of every sequential-grant loop (the DPF/DPK/FCFS
+    baselines and SP2's greedy cover).  On the local layout it is a plain
+    ``lax.scan`` — one step per visit, byte-identical to the pre-seam code.
+
+    On a sharded ``block_axis`` the naive scan costs **one cross-shard
+    collective per visited pipeline** (the per-step AND).  Here visits are
+    processed in segments of ``block_axis.fits_segment``: each refinement
+    evaluates the whole segment's fits under a guessed in-segment decision
+    vector with ONE batched ``pmin`` (payload = the segment), then adopts
+    the result as the next guess.  Because a decision vector that is
+    correct on its first ``p`` entries yields verdicts that are correct on
+    ``p + 1`` entries (each verdict only depends on *earlier* decisions),
+    every refinement extends the correct prefix — the loop converges to
+    the unique self-consistent vector in at most G refinements, typically
+    1-2 (log-ish depth in practice vs G sequential collectives).  The
+    final remaining-capacity state is recomputed under the converged
+    decisions with the same subtraction order as the naive scan, so
+    decisions AND arithmetic are bit-identical to the per-step path on any
+    shard count.
+    """
+    if not block_axis.sharded or block_axis.fits_segment <= 1:
+        def step(rem, xs):
+            dem, a = xs
+            ok = a & block_axis.all(jnp.all(dem <= rem + feas))
+            return jnp.where(ok, rem - dem, rem), ok
+
+        return jax.lax.scan(step, remaining, (dems, act))
+
+    G = int(block_axis.fits_segment)
+    V = dems.shape[0]
+    pad = (-V) % G
+    if pad:
+        dems = jnp.concatenate(
+            [dems, jnp.zeros((pad,) + dems.shape[1:], dems.dtype)])
+        act = jnp.concatenate([act, jnp.zeros((pad,), bool)])
+    dem_seg = dems.reshape((V + pad) // G, G, dems.shape[-1])
+    act_seg = act.reshape((V + pad) // G, G)
+
+    def seg_body(rem, xs):
+        dem_g, act_g = xs
+
+        def refine(dec):
+            """Segment fits + end-state under in-segment decisions ``dec``
+            (one local G-step scan, one [G]-payload collective)."""
+            def step(r, xs2):
+                d, a, dc = xs2
+                fit = a & jnp.all(d <= r + feas)
+                return jnp.where(dc, r - d, r), fit
+
+            r_end, fits = jax.lax.scan(step, rem, (dem_g, act_g, dec))
+            return r_end, block_axis.all(fits)
+
+        dec0 = jnp.zeros((G,), bool)
+        r0, f0 = refine(dec0)
+
+        def cond(carry):
+            dec, fits, _ = carry
+            return jnp.any(dec != fits)
+
+        def body(carry):
+            _, fits, _ = carry
+            r_end, new_fits = refine(fits)
+            return fits, new_fits, r_end
+
+        # at exit dec == fits: the evaluation that produced ``fits`` used
+        # the very decisions it returned, so they are the (unique) correct
+        # ones and ``r_end`` is the capacity state under them.
+        _, taken_g, r_end = jax.lax.while_loop(cond, body, (dec0, f0, r0))
+        return r_end, taken_g
+
+    rem_out, taken = jax.lax.scan(seg_body, remaining, (dem_seg, act_seg))
+    return rem_out, taken.reshape(-1)[:V]

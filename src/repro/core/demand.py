@@ -25,6 +25,64 @@ Array = jax.Array
 _EPS = 1e-12
 
 
+@dataclasses.dataclass(frozen=True)
+class DemandView:
+    """Two-ring residency view of the ``[M, N, B]`` demand tensor.
+
+    The round functions never mutate demand; what varies tick-to-tick in a
+    long-running service is only the *hot ring* — the small stripe of
+    slots the current chunk's mints can touch, where retirement wipes
+    stale demand columns.  Those wipes are monotone and time-indexed: the
+    entry ``(m, n, b)`` is zero at tick ``t`` exactly when slot ``b`` was
+    re-minted at some chunk tick ``mint_tick[b] <= t`` and the pipeline
+    was submitted before it (``spawn_tick[m, n] < mint_tick[b]``).  So the
+    hot ring needs no resident copy at all: ``base`` — the cold page
+    store, the tensor as it stood at the chunk boundary — stays a scan
+    *constant*, and :meth:`masked` reconstructs the tick's effective
+    demand by fusing the wipe predicate into the activity-masking product
+    the round performs anyway.  The wrapped tick body therefore carries
+    O(1) demand state (down from the full O(M·N·B) carry), and every
+    produced value is bit-identical to mutating the tensor in place:
+    ``x * 1.0 == x`` and ``x * 0.0 == 0.0`` for the nonnegative finite
+    demands.
+
+    ``mint_tick=None`` is the monolithic view (engine episodes, wrap-free
+    chunks, the full-tensor carry fallback): ``base`` is already current.
+    """
+
+    base: Array                         # [M, N, B]
+    mint_tick: Optional[Array] = None   # [B] i32 chunk mint tick (NEVER if
+                                        #   the slot is not minted)
+    spawn_tick: Optional[Array] = None  # [M, N] i32 pipeline activation
+    now_tick: Optional[Array] = None    # scalar i32 current tick
+
+    def wiped(self) -> Array:
+        """[M, N, B] bool — entries retired by this chunk's mints up to
+        (and including) ``now_tick``."""
+        mt = self.mint_tick[None, None, :]
+        return (mt <= self.now_tick) & (self.spawn_tick[..., None] < mt)
+
+    def masked(self, active: Array) -> Array:
+        """The tick's effective demand: ``base`` with inactive pipelines
+        and retired entries zeroed, in one fused elementwise pass.
+
+        The paged result sits behind an ``optimization_barrier``: the
+        fused wipe predicate must be evaluated once into a real buffer,
+        not inlined into every downstream consumer of the demand tensor
+        (XLA would otherwise re-derive the [M, N, B] compare per use)."""
+        m = active[..., None]
+        if self.mint_tick is None:
+            return self.base * m.astype(self.base.dtype)
+        m = m & ~self.wiped()
+        return jax.lax.optimization_barrier(
+            self.base * m.astype(self.base.dtype))
+
+
+jax.tree_util.register_dataclass(
+    DemandView, data_fields=["base", "mint_tick", "spawn_tick", "now_tick"],
+    meta_fields=[])
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class RoundInputs:

@@ -39,8 +39,8 @@ import numpy as np
 
 from . import utility as ut
 from .blockaxis import LOCAL, BlockAxis
-from .demand import (AnalystView, RoundInputs, infeasible_pipelines,
-                     normalized_demand)
+from .demand import (AnalystView, DemandView, RoundInputs,
+                     infeasible_pipelines, normalized_demand)
 from .registry import get_round_fn
 from .scheduler import SchedulerConfig
 
@@ -182,8 +182,12 @@ def _episode_metrics(ep: Episode, cfg: SchedulerConfig, round_fn,
         budget_total = jnp.where(created, ep.block_budget, 1.0)
         active = (ep.spawn_round[:, None] <= r) & ~done
         now = r.astype(f32) * ROUND_SECONDS
+        # the episode's demand is immutable, so the view is monolithic
+        # (hot=None); the service's paged chunks build the same RoundInputs
+        # through a two-ring view — one seam, both planes.
+        view = DemandView(base=ep.demand)
         rnd = RoundInputs(
-            demand=ep.demand * active[..., None].astype(f32),
+            demand=view.masked(active),
             active=active,
             arrival=jnp.where(active, ep.arrival, 0.0),
             loss=jnp.where(active, ep.loss, 1.0),

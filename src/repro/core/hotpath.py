@@ -63,3 +63,46 @@ def matvec_t(c: jax.Array, x: jax.Array, use_pallas: bool = False) -> jax.Array:
     if not use_pallas:
         return x @ c
     return matvec(c.T, x, use_pallas=True)
+
+
+def boost_scan(g_ord: jax.Array, sel_ord: jax.Array, leftover: jax.Array,
+               kappa_max: float, use_pallas: bool = False,
+               block_axis=None):
+    """SP2's sequential proportional-boost sweep (packing Eq 20 heuristic).
+
+    Visits the pre-permuted pipeline rows ``g_ord [N, K]`` in order; each
+    selected pipeline receives ``extra = clip(min_k leftover_k / g_jk, 0,
+    kappa_max - 1)`` additional allocation, debited from ``leftover``.
+    Returns ``(leftover_after [K], extras [N])``.
+
+    ``use_pallas`` fuses the whole sweep — N steps of divide / min-reduce /
+    update over K — into one VMEM-resident Pallas kernel
+    (:func:`repro.kernels.budget_alloc.boost_scan`), batched over analysts
+    and swap candidates by the surrounding vmaps.  The kernel path requires
+    a local block axis: on a sharded mesh each step's water level is a
+    cross-shard ``pmin``, which cannot live inside a per-device kernel, so
+    sharded callers keep the jnp scan (the dispatch below enforces this).
+    """
+    if use_pallas and (block_axis is None or not block_axis.sharded):
+        from repro.kernels.budget_alloc import boost_scan as boost_kernel
+        extras, left = boost_kernel(g_ord, sel_ord, leftover,
+                                    kappa_max=kappa_max,
+                                    interpret=_interpret())
+        return left, extras
+
+    _EPS = 1e-9
+
+    def step(left, xs):
+        dem, is_sel = xs
+        ratio = jnp.where(dem > _EPS, left / jnp.maximum(dem, _EPS),
+                          jnp.inf)
+        # boost water level = min over ALL blocks the pipeline touches
+        # (cross-shard min on a sharded ledger)
+        mn = jnp.min(ratio)
+        if block_axis is not None:
+            mn = block_axis.min(mn)
+        extra = jnp.clip(mn, 0.0, kappa_max - 1.0)
+        extra = jnp.where(is_sel, extra, 0.0)
+        return left - extra * dem, extra
+
+    return jax.lax.scan(step, leftover, (g_ord, sel_ord))

@@ -32,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import hotpath
 from . import swap as _swap
-from .blockaxis import LOCAL, BlockAxis
+from .blockaxis import LOCAL, BlockAxis, grant_fits_scan
 
 _EPS = 1e-9
 _FEAS = 1e-6  # feasibility slack (float32 headroom on normalized shares)
@@ -51,25 +52,22 @@ def greedy_cover(gamma, mu, active, budget, block_axis: BlockAxis = LOCAL):
     """Select max-count pipeline set by ascending-mu greedy.  [N,K]->[N] bool.
 
     ``mu`` must be the *global* dominant share (already reduced across
-    shards), so the visit order is identical on every shard; each step's
-    fits-check is a local all finished with a cross-shard AND."""
+    shards), so the visit order is identical on every shard; the
+    grant-if-fits sweep goes through :func:`~repro.core.blockaxis.
+    grant_fits_scan` — a plain per-visit scan locally, segment-batched
+    cross-shard ANDs on a sharded mesh."""
     N = mu.shape[0]
     key = jnp.where(active, mu, _BIG)
     order = jnp.argsort(key)
-
-    def step(remaining, idx):
-        dem = gamma[idx]
-        ok = active[idx] & block_axis.all(jnp.all(dem <= remaining + _FEAS))
-        remaining = jnp.where(ok, remaining - dem, remaining)
-        return remaining, ok
-
-    _, taken = jax.lax.scan(step, budget, order)
+    _, taken = grant_fits_scan(gamma[order], active[order], budget, _FEAS,
+                               block_axis)
     sel = jnp.zeros((N,), bool).at[order].set(taken)
     return sel & active
 
 
 def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float,
-                       block_axis: BlockAxis = LOCAL):
+                       block_axis: BlockAxis = LOCAL,
+                       use_pallas: bool = False):
     """Eq 20 heuristic: x=1 for selected, then greedy kappa boosts in
     descending mu*a order.  Returns (x_ij, used, objective).
 
@@ -78,7 +76,12 @@ def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float,
     step-for-step identical to sorting only the selected set but lets the
     scan carry pre-permuted gamma rows instead of dynamically gathering a
     row per step — under swap_refine's candidate vmap that removes one
-    [n_candidates, K] gather per scan step (sel is the only batched input)."""
+    [n_candidates, K] gather per scan step (sel is the only batched input).
+
+    The sweep itself dispatches through :func:`repro.core.hotpath.
+    boost_scan`: ``use_pallas`` fuses the N-step divide/min/update chain
+    into one VMEM-resident kernel on a local block axis (sharded meshes
+    keep the jnp scan — the per-step water level is a cross-shard min)."""
     base_used = jnp.sum(gamma * sel[:, None], axis=0)
     leftover = budget - base_used
 
@@ -86,18 +89,8 @@ def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float,
     g_ord = gamma[order]                     # [N, K], gathered once
     sel_ord = sel[order]
 
-    def step(leftover, xs):
-        dem, is_sel = xs
-        ratio = jnp.where(dem > _EPS, leftover / jnp.maximum(dem, _EPS),
-                          jnp.inf)
-        # boost water level = min over ALL blocks the pipeline touches
-        # (cross-shard min on a sharded ledger)
-        extra = jnp.clip(block_axis.min(jnp.min(ratio)), 0.0, kappa_max - 1.0)
-        extra = jnp.where(is_sel, extra, 0.0)
-        leftover = leftover - extra * dem
-        return leftover, extra
-
-    leftover, extras = jax.lax.scan(step, leftover, (g_ord, sel_ord))
+    leftover, extras = hotpath.boost_scan(g_ord, sel_ord, leftover,
+                                          kappa_max, use_pallas, block_axis)
     x = jnp.zeros_like(mu).at[order].set(extras)
     x = jnp.where(sel, 1.0 + x, 0.0)
     used = jnp.sum(gamma * x[:, None], axis=0)
@@ -106,14 +99,15 @@ def proportional_boost(gamma, mu, a, active, sel, budget, kappa_max: float,
 
 
 def _boost_objective(gamma, mu, a, active, sel, budget, kappa_max,
-                     block_axis: BlockAxis = LOCAL):
+                     block_axis: BlockAxis = LOCAL, use_pallas: bool = False):
     _, _, obj = proportional_boost(gamma, mu, a, active, sel, budget,
-                                   kappa_max, block_axis)
+                                   kappa_max, block_axis, use_pallas)
     return obj
 
 
 def swap_refine_reference(gamma, mu, a, active, sel, budget, kappa_max: float,
-                          block_axis: BlockAxis = LOCAL):
+                          block_axis: BlockAxis = LOCAL,
+                          use_pallas: bool = False):
     """Single-swap local search, reference path: for every (selected s,
     unselected u) try sel - {s} + {u}; keep the feasible candidate with the
     best boosted objective.  Count is preserved by construction.
@@ -135,43 +129,47 @@ def swap_refine_reference(gamma, mu, a, active, sel, budget, kappa_max: float,
     cands, valids = jax.vmap(make_candidate)(s_flat, u_flat)
     objs = jax.vmap(
         lambda c: _boost_objective(gamma, mu, a, active, c, budget, kappa_max,
-                                   block_axis)
+                                   block_axis, use_pallas)
     )(cands)
     objs = jnp.where(valids, objs, -_BIG)
     base_obj = _boost_objective(gamma, mu, a, active, sel, budget, kappa_max,
-                                block_axis)
+                                block_axis, use_pallas)
     best = jnp.argmax(objs)
     improved = objs[best] > base_obj + 1e-12
     return jnp.where(improved, cands[best], sel)
 
 
 def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float,
-                block_axis: BlockAxis = LOCAL, incremental: bool = True):
+                block_axis: BlockAxis = LOCAL, incremental: bool = True,
+                use_pallas: bool = False):
     """Single-swap refinement — dispatches to the incremental engine
     (:func:`repro.core.swap.swap_refine_incremental`, default) or the full
     O(N^3 K) reference path.  Both return the same selection bit-for-bit."""
     fn = _swap.swap_refine_incremental if incremental else \
         swap_refine_reference
-    return fn(gamma, mu, a, active, sel, budget, kappa_max, block_axis)
+    return fn(gamma, mu, a, active, sel, budget, kappa_max, block_axis,
+              use_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("kappa_max", "refine",
-                                             "incremental", "block_axis"))
+                                             "incremental", "block_axis",
+                                             "use_pallas"))
 def pack_analyst(gamma, mu, a, active, budget, kappa_max: float = 8.0,
                  refine: bool = True, incremental: bool = True,
-                 block_axis: BlockAxis = LOCAL) -> PackResult:
+                 block_axis: BlockAxis = LOCAL,
+                 use_pallas: bool = False) -> PackResult:
     """Full SP2 for one analyst.  vmap over analysts for the batched version."""
     sel = greedy_cover(gamma, mu, active, budget, block_axis)
     if refine:
         sel = swap_refine(gamma, mu, a, active, sel, budget, kappa_max,
-                          block_axis, incremental)
+                          block_axis, incremental, use_pallas)
     x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget,
-                                      kappa_max, block_axis)
+                                      kappa_max, block_axis, use_pallas)
     return PackResult(x_ij=x, selected=sel, used=used, objective=obj)
 
 
 pack_all = jax.vmap(pack_analyst,
-                    in_axes=(0, 0, 0, 0, 0, None, None, None, None),
+                    in_axes=(0, 0, 0, 0, 0, None, None, None, None, None),
                     out_axes=0)
 
 

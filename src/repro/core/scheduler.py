@@ -98,7 +98,7 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
     a_ij = T_ij * rnd.loss
     pack = pack_all(gamma, mu_ij, a_ij, active, budget_i,
                     cfg.kappa_max, cfg.refine, cfg.incremental_swap,
-                    block_axis)
+                    block_axis, cfg.use_pallas)
 
     x_ij = pack.x_ij
     grants = rnd.demand * x_ij[..., None]             # epsilon units

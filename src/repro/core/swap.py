@@ -88,7 +88,8 @@ def swap_candidates(sel, active):
 
 def swap_candidate_objectives(gamma, mu, a, active, sel, budget,
                               kappa_max: float,
-                              block_axis: BlockAxis = LOCAL):
+                              block_axis: BlockAxis = LOCAL,
+                              use_pallas: bool = False):
     """Evaluate the compacted candidate set.
 
     Returns ``(cands [C, N] bool, objs [C], valid [C])`` where ``objs``
@@ -104,7 +105,8 @@ def swap_candidate_objectives(gamma, mu, a, active, sel, budget,
         used = jnp.sum(gamma * cand[:, None], axis=0)
         feasible = block_axis.all(jnp.all(used <= budget + packing._FEAS))
         _, _, obj = packing.proportional_boost(gamma, mu, a, active, cand,
-                                               budget, kappa_max, block_axis)
+                                               budget, kappa_max, block_axis,
+                                               use_pallas)
         return cand, obj, feasible
 
     cands, objs, feas = jax.vmap(evaluate)(s_c, u_c)
@@ -113,7 +115,8 @@ def swap_candidate_objectives(gamma, mu, a, active, sel, budget,
 
 def swap_refine_incremental(gamma, mu, a, active, sel, budget,
                             kappa_max: float,
-                            block_axis: BlockAxis = LOCAL):
+                            block_axis: BlockAxis = LOCAL,
+                            use_pallas: bool = False):
     """Single-swap local search over the compacted candidate set.
 
     Same contract and same result as
@@ -122,9 +125,9 @@ def swap_refine_incremental(gamma, mu, a, active, sel, budget,
     candidate in s-major order) at a quarter of the work.
     """
     cands, objs, _ = swap_candidate_objectives(
-        gamma, mu, a, active, sel, budget, kappa_max, block_axis)
+        gamma, mu, a, active, sel, budget, kappa_max, block_axis, use_pallas)
     _, _, base_obj = packing.proportional_boost(
-        gamma, mu, a, active, sel, budget, kappa_max, block_axis)
+        gamma, mu, a, active, sel, budget, kappa_max, block_axis, use_pallas)
     best = jnp.argmax(objs)
     improved = objs[best] > base_obj + 1e-12
     return jnp.where(improved, cands[best], sel)

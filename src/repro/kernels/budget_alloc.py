@@ -95,3 +95,58 @@ def matvec(c, v, *, block_m: int = 256, block_k: int = 1024,
 def matvec_t(c, x, **kw):
     """load_k = sum_i c_ik x_i — transpose form, reuses `matvec`."""
     return matvec(c.T, x, **kw)
+
+
+_BOOST_EPS = 1e-9
+
+
+def _boost_scan_kernel(g_ref, sel_ref, left_ref, extras_ref, oleft_ref,
+                       left_scr, *, kappa_max: float):
+    """SP2 proportional-boost sweep, fully VMEM-resident.
+
+    The leftover vector lives in scratch for the whole sweep; each of the
+    N steps reads one demand row, forms the boost water level (min over K
+    of leftover / demand), debits the boost, and records it — the
+    divide / min / update chain the jnp path runs as N separate scan steps
+    with HBM round-trips between them.  Batched over analysts and swap
+    candidates by vmap (each batch element becomes a grid instance)."""
+    left_scr[...] = left_ref[...]
+    extras_ref[...] = jnp.zeros_like(extras_ref)
+    n = g_ref.shape[0]
+
+    def step(j, carry):
+        dem = pl.load(g_ref, (pl.dslice(j, 1), slice(None)))     # [1, K]
+        left = left_scr[...]                                     # [1, K]
+        ratio = jnp.where(dem > _BOOST_EPS,
+                          left / jnp.maximum(dem, _BOOST_EPS), jnp.inf)
+        extra = jnp.clip(jnp.min(ratio), 0.0, kappa_max - 1.0)
+        is_sel = pl.load(sel_ref, (pl.dslice(0, 1),
+                                   pl.dslice(j, 1)))[0, 0] != 0
+        extra = jnp.where(is_sel, extra, 0.0)
+        left_scr[...] = left - extra * dem
+        # lane-select store (TPU-friendly: no scalar scatter)
+        idx = jax.lax.broadcasted_iota(jnp.int32, extras_ref.shape, 1)
+        extras_ref[...] = jnp.where(idx == j, extra, extras_ref[...])
+        return carry
+
+    jax.lax.fori_loop(0, n, step, 0)
+    oleft_ref[...] = left_scr[...]
+
+
+def boost_scan(g_ord, sel_ord, leftover, *, kappa_max: float,
+               interpret: bool = False):
+    """Fused SP2 boost sweep.  ``g_ord [N, K]`` (visit-ordered demand
+    rows), ``sel_ord [N]`` bool, ``leftover [K]`` -> ``(extras [N],
+    leftover_after [K])``, bit-identical to the jnp ``lax.scan`` reference
+    (:func:`repro.kernels.ref.boost_scan_ref`)."""
+    import functools
+
+    N, K = g_ord.shape
+    extras, left = pl.pallas_call(
+        functools.partial(_boost_scan_kernel, kappa_max=float(kappa_max)),
+        out_shape=(jax.ShapeDtypeStruct((1, N), jnp.float32),
+                   jax.ShapeDtypeStruct((1, K), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((1, K), jnp.float32)],
+        interpret=interpret,
+    )(g_ord, sel_ord.astype(jnp.int32)[None, :], leftover[None, :])
+    return extras[0], left[0]

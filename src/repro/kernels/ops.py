@@ -9,7 +9,7 @@ import functools
 import jax
 
 from . import ref
-from .budget_alloc import matvec, matvec_t, rowmax
+from .budget_alloc import boost_scan, matvec, matvec_t, rowmax
 from .decode_attention import decode_attention
 from .dp_clip_noise import clip_accumulate, dp_clip_accumulate, rownorms
 from .flash_attention import flash_attention
@@ -62,8 +62,16 @@ def matvec_op(c, v, *, block_m=256, block_k=1024, interpret=None):
     return matvec(c, v, block_m=block_m, block_k=block_k, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("kappa_max", "interpret"))
+def boost_scan_op(g_ord, sel_ord, leftover, *, kappa_max=2.0,
+                  interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return boost_scan(g_ord, sel_ord, leftover, kappa_max=kappa_max,
+                      interpret=interpret)
+
+
 __all__ = ["flash_attention_op", "decode_attention_op", "rglru_scan_op",
-           "dp_clip_accumulate_op", "rowmax_op", "matvec_op", "ref",
-           "flash_attention", "decode_attention", "rglru_scan",
-           "dp_clip_accumulate", "rownorms", "clip_accumulate", "rowmax",
-           "matvec", "matvec_t"]
+           "dp_clip_accumulate_op", "rowmax_op", "matvec_op",
+           "boost_scan_op", "ref", "flash_attention", "decode_attention",
+           "rglru_scan", "dp_clip_accumulate", "rownorms",
+           "clip_accumulate", "rowmax", "matvec", "matvec_t", "boost_scan"]

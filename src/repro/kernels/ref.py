@@ -80,3 +80,22 @@ def rowmax_ref(gamma):
 def matvec_ref(c, lam):
     """y_i = sum_k c_ik lam_k  (waterfill dual denominator).  [M,K]x[K]->[M]."""
     return c.astype(jnp.float32) @ lam.astype(jnp.float32)
+
+
+def boost_scan_ref(g_ord, sel_ord, leftover, kappa_max):
+    """SP2 sequential proportional boost (packing Eq 20 heuristic):
+    visit rows of g_ord [N,K] in order; each selected row j gets
+    ``extra = clip(min_k leftover_k / g_jk, 0, kappa_max - 1)`` debited
+    from leftover.  Returns (extras [N], leftover_after [K])."""
+    eps = 1e-9
+
+    def step(left, xs):
+        dem, is_sel = xs
+        ratio = jnp.where(dem > eps, left / jnp.maximum(dem, eps), jnp.inf)
+        extra = jnp.clip(jnp.min(ratio), 0.0, kappa_max - 1.0)
+        extra = jnp.where(is_sel, extra, 0.0)
+        return left - extra * dem, extra
+
+    left, extras = jax.lax.scan(step, leftover.astype(jnp.float32),
+                                (g_ord.astype(jnp.float32), sel_ord))
+    return extras, left

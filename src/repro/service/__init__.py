@@ -13,8 +13,8 @@ from .queue import AdmissionQueue, AdmissionStats
 from .replay import (PARITY_KEYS, collect_service_metrics, freeze_trace,
                      replay_gap)
 from .server import FlaasService, ServiceConfig
-from .state import (NEVER, MintPlan, ServiceState, SlotTable, admit_batch,
-                    plan_mints)
+from .state import (NEVER, MintPlan, PagePlan, ServiceState, SlotTable,
+                    admit_batch, plan_mints, plan_pages)
 from .telemetry import StreamingTelemetry
 from .traces import (PATTERNS, ArrivalTrace, PrecomputedTrace, Submission,
                      make_trace)
@@ -22,8 +22,8 @@ from .traces import (PATTERNS, ArrivalTrace, PrecomputedTrace, Submission,
 __all__ = [
     "AdmissionQueue", "AdmissionStats", "PARITY_KEYS",
     "collect_service_metrics", "freeze_trace", "replay_gap", "FlaasService",
-    "ServiceConfig", "NEVER", "MintPlan", "ServiceState", "SlotTable",
-    "admit_batch", "plan_mints", "StreamingTelemetry", "PATTERNS",
-    "ArrivalTrace",
+    "ServiceConfig", "NEVER", "MintPlan", "PagePlan", "ServiceState",
+    "SlotTable", "admit_batch", "plan_mints", "plan_pages",
+    "StreamingTelemetry", "PATTERNS", "ArrivalTrace",
     "PrecomputedTrace", "Submission", "make_trace",
 ]

@@ -30,14 +30,14 @@ import numpy as np
 
 from repro.core import utility as ut
 from repro.core.blockaxis import LOCAL, BlockAxis
-from repro.core.demand import RoundInputs
+from repro.core.demand import DemandView, RoundInputs
 from repro.core.engine import round_diagnostics
 from repro.core.registry import get_round_fn
 from repro.core.scheduler import SchedulerConfig
 from repro.core.simulation import ROUND_SECONDS
 
 from .queue import AdmissionQueue
-from .state import ServiceState, SlotTable, admit_batch, plan_mints
+from .state import NEVER, ServiceState, SlotTable, admit_batch, plan_mints
 from .telemetry import StreamingTelemetry
 from .traces import ArrivalTrace, demand_window_ticks
 
@@ -54,36 +54,84 @@ class ServiceConfig:
     max_pending: int = 1024        # queue bound (backpressure beyond this)
     validate: bool = True          # host-checks conservation per chunk
     diagnostics: bool = False      # per-tick SP1 diagnostics in chunk output
+    paged: bool = True             # two-ring paged demand residency on wrap
+                                   # chunks (False = carry the full tensor)
     latency_reservoir: int = 100_000
 
 
 def _chunk_metrics(state: ServiceState, mint_ops, *,
                    cfg: SchedulerConfig, round_fn, n_ticks: int,
-                   retire: bool, diagnostics: bool = False,
+                   mode: str, diagnostics: bool = False,
                    block_axis: BlockAxis = LOCAL):
     """Traceable: run ``n_ticks`` service ticks in one ``lax.scan``.
 
     Mirrors ``engine._episode_metrics`` tick-for-tick so a wrap-free ledger
     over an episode-compatible trace is bit-identical to ``run_episode``.
 
-    Two statically-selected bodies (see :class:`~repro.service.state.MintPlan`):
+    Three statically-selected bodies (see
+    :class:`~repro.service.state.MintPlan`):
 
-    * wrap-free (``retire=False``): ``mint_ops = (mint_add, budget_total,
-      created)`` precomputed rows; carry is ``(done, capacity)`` and the
-      mint is ``capacity += mint_add`` — **op-for-op the engine's round
-      body**, so a service tick costs an engine round.
-    * wrap (``retire=True``): ``mint_ops = (mask, budgets, budget_total,
-      created)``; minted slots *evict* their previous block (capacity set,
-      not added; demand column zeroed), and demand joins the carry.
+    * ``"wrapfree"``: ``mint_ops = (mint_add, budget_total, created)``
+      precomputed rows; carry is ``(done, capacity)`` and the mint is
+      ``capacity += mint_add`` — **op-for-op the engine's round body**, so
+      a service tick costs an engine round.
+    * ``"paged"`` (ring wrapped, default): ``mint_ops = (mask, budgets,
+      budget_total, created, mint_tick)``; minted slots evict their
+      previous block (capacity set, not added; stale demand retired).
+      Demand stays a scan *constant*: inside one chunk the only demand
+      mutations are the monotone retirement wipes, each pinned to its
+      slot's ``mint_tick``, so the tick body reconstructs the hot ring
+      algebraically — :class:`~repro.core.demand.DemandView` fuses the
+      wipe predicate into the activity-masking product the round performs
+      anyway, and the has-demand expiry test is hoisted to three
+      chunk-level reductions.  The wrapped tick carries O(1) demand state
+      (down from O(M·N·B)) and adds zero full-tensor passes over the
+      wrap-free body; every value is bit-identical to the full-tensor
+      carry.  The chunk-boundary eviction sweep — one fused elementwise
+      pass applying the chunk's accumulated wipes — grafts the cold store
+      forward.
+    * ``"carry"`` (ring wrapped, hot window spilled — a slot minted twice
+      in one chunk): the pre-paging fallback — the full demand tensor
+      joins the carry.
     """
     f32 = state.demand.dtype
     ticks = state.tick + jnp.arange(n_ticks, dtype=jnp.int32)
+    retire = mode != "wrapfree"
+    if mode == "paged":
+        *tick_ops, mint_tick, hot_slots = mint_ops   # [B] i32, [S, Hp/S]
+        hot_slots = hot_slots.reshape(-1)            # local hot-ring slots
+        spawn_b = state.spawn_tick[..., None]        # [M, N, 1]
+        # the hot ring, gathered once per chunk: every in-chunk demand
+        # mutation (and therefore every chunk-hoisted reduction below)
+        # lives in these H columns — O(M*N*H) work, not O(M*N*B).
+        hot_dem = state.demand[:, :, hot_slots]      # [M, N, H]
+        mt_h = mint_tick[hot_slots][None, None, :]   # [1, 1, H]
+        live_h = hot_dem > 0.0
+        minted_h = mt_h != NEVER                     # padding cols: False
+        doomed_h = live_h & (spawn_b < mt_h) & minted_h
+        # has-demand expiry test, hoisted to chunk-level reductions (the
+        # cold store never changes inside a chunk; OR-decomposition over
+        # cold / never-wiped-hot / not-yet-wiped-hot entries is exact):
+        # a pipeline still has demand at tick t iff it has a cold entry,
+        # a hot entry it submitted after the re-mint, or a doomed entry
+        # whose wipe tick is still ahead.
+        cold_any = jnp.any((state.demand > 0.0) &
+                           (mint_tick[None, None, :] == NEVER), axis=-1)
+        keep_any = jnp.any(live_h & minted_h & (spawn_b >= mt_h), axis=-1)
+        last_wipe = jnp.max(jnp.where(doomed_h, mt_h, -1), axis=-1)
+        # paging telemetry (per-chunk): stale entries retired by the
+        # chunk's mints + live hot-ring entries at the boundary.
+        hot_evicted = block_axis.sum(jnp.sum(doomed_h.astype(jnp.int32)))
+        hot_live = block_axis.sum(jnp.sum(
+            (live_h & minted_h).astype(jnp.int32)))
+    else:
+        tick_ops = tuple(mint_ops)
 
-    def tick_out(demand, pending, capacity, budget_total, created, t):
-        """Shared per-tick round + metrics, both mint modes."""
+    def tick_out(view, pending, capacity, budget_total, created, t):
+        """Shared per-tick round + metrics, all mint modes."""
         now = t.astype(f32) * ROUND_SECONDS
         rnd = RoundInputs(
-            demand=demand * pending[..., None].astype(f32),
+            demand=view.masked(pending),
             active=pending,
             arrival=jnp.where(pending, state.arrival, 0.0),
             loss=jnp.where(pending, state.loss, 1.0),
@@ -109,21 +157,29 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
         return res, out
 
     def body(carry, xs):
-        if retire:  # ring wrapped: minted slots evict their previous block
-            demand, done, capacity = carry
+        # Retirement wipes a minted slot's demand column only for
+        # pipelines submitted BEFORE the mint tick — their entries
+        # referenced the evicted block.  A pipeline spawning at exactly
+        # the mint tick demands the block being minted then (prefetched
+        # admission wrote it at the boundary), so its demand survives.
+        done, capacity = carry[-2:]
+        if mode == "paged":
             minted, budgets, budget_total, created, t = xs
-            # Wipe a minted slot's demand column only for pipelines that
-            # were submitted BEFORE this tick — their entries referenced
-            # the evicted block.  A pipeline spawning at exactly this tick
-            # demands the block being minted now (prefetched admission
-            # wrote it at the boundary), so its demand must survive.
+            capacity = jnp.where(minted, budgets, capacity)
+            view = DemandView(base=state.demand, mint_tick=mint_tick,
+                              spawn_tick=state.spawn_tick, now_tick=t)
+            any_demand = cold_any | keep_any | (last_wipe > t)
+        elif mode == "carry":
+            demand = carry[0]
+            minted, budgets, budget_total, created, t = xs
             stale = minted[None, None, :] & (state.spawn_tick < t)[..., None]
             demand = jnp.where(stale, 0.0, demand)
             capacity = jnp.where(minted, budgets, capacity)
+            view = DemandView(base=demand)
+            any_demand = jnp.any(demand > 0.0, axis=-1)
         else:       # wrap-free: demand is a scan constant, mint is an add
-            done, capacity = carry
             mint_add, budget_total, created, t = xs
-            demand = state.demand
+            view = DemandView(base=state.demand)
             capacity = capacity + mint_add
         pending = (state.spawn_tick <= t) & ~done
         if retire:
@@ -132,37 +188,50 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             # grantable" — greedy_cover would hand it a phantom zero-budget
             # grant.  It *expires* instead: completed with nothing, slot
             # recycled at the boundary, counted separately in telemetry.
-            has_demand = block_axis.any(jnp.any(demand > 0.0, axis=-1))
+            has_demand = block_axis.any(any_demand)
             expired = pending & ~has_demand
             pending = pending & has_demand
-        res, out = tick_out(demand, pending, capacity, budget_total,
+        res, out = tick_out(view, pending, capacity, budget_total,
                             created, t)
         capacity = jnp.maximum(capacity - res.consumed, 0.0)
         done = done | res.selected
         if retire:
             done = done | expired
             out["expired"] = expired
-        new_carry = (demand, done, capacity) if retire else (done, capacity)
+        new_carry = (done, capacity) if mode != "carry" \
+            else (demand, done, capacity)
         return new_carry, out
 
     init = (state.done, state.block_capacity)
-    if retire:
+    if mode == "carry":
         init = (state.demand,) + init
-    final, ys = jax.lax.scan(body, init, mint_ops + (ticks,))
+    final, ys = jax.lax.scan(body, init, tuple(tick_ops) + (ticks,))
+    if mode == "paged":
+        # chunk-boundary eviction sweep: apply the chunk's accumulated
+        # wipes to the cold page store in one fused elementwise pass
+        # (shard-local on a striped mesh — mint_tick shards with the
+        # ledger, so no cross-shard traffic).
+        done_f, cap_f = final
+        mt_b = mint_tick[None, None, :]
+        swept = jnp.where((mt_b != NEVER) & (spawn_b < mt_b), 0.0,
+                          state.demand)
+        final = (swept, done_f, cap_f)
+        ys["hot_evicted"] = hot_evicted
+        ys["hot_live"] = hot_live
     # Return only what changed: echoing the (unchanged) demand through the
     # jit in wrap-free mode would force XLA to copy the [M, N, B] buffer
     # into a fresh output every chunk — the host grafts the carries back
-    # onto the state instead (see FlaasService._after_chunk).
+    # onto the state instead (see FlaasService.run_chunk).
     return final, ys
 
 
 @functools.lru_cache(maxsize=128)
 def _compiled_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
-                    retire: bool, diagnostics: bool = False):
+                    mode: str, diagnostics: bool = False):
     round_fn = get_round_fn(scheduler)
     return jax.jit(functools.partial(
         _chunk_metrics, cfg=cfg, round_fn=round_fn, n_ticks=n_ticks,
-        retire=retire, diagnostics=diagnostics))
+        mode=mode, diagnostics=diagnostics))
 
 
 class FlaasService:
@@ -219,33 +288,49 @@ class FlaasService:
         service overrides this with a striped layout (repro.shard)."""
         return bids % self.cfg.block_slots
 
-    def _compiled_step(self, n_ticks: int, retire: bool):
+    def _page_shards(self) -> int:
+        """Shard count the hot ring is paged over.  Subclass hook: the
+        sharded service pages each mesh shard's own ``bid % S`` stripe."""
+        return 1
+
+    def _compiled_step(self, n_ticks: int, mode: str):
         """Compiled ``(state, mint_ops) -> (final_carry, ys)`` chunk step.
         Subclass hook: the sharded service returns a shard_map'd step."""
         return _compiled_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
-                               retire, self.cfg.diagnostics)
+                               mode, self.cfg.diagnostics)
 
     def _plan_chunk(self, tick0: int, n_ticks: int):
-        """(plan, device mint_ops, compiled step) for the upcoming chunk."""
+        """(plan, mode, device mint_ops, compiled step) for the upcoming
+        chunk.  Mode resolution: wrap-free chunks keep the engine-identical
+        fast path; wrap chunks run paged (hot-ring carry) unless paging is
+        off or the hot window spills the ring, which falls back to the
+        full-tensor carry."""
         plan = plan_mints(tick0, n_ticks, self.cfg.block_slots,
                           self.trace.device_budget,
                           self.trace.blocks_per_device,
                           self._ledger_budget, self._ledger_birth,
-                          slot_fn=self._slot_of)
-        if plan.retire:
-            ops = (jnp.asarray(plan.mask), jnp.asarray(plan.budgets),
-                   jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
-        else:   # budgets rows double as the capacity-add operand
+                          slot_fn=self._slot_of,
+                          page_shards=self._page_shards()
+                          if self.cfg.paged else 0)
+        if not plan.retire:
+            mode = "wrapfree"   # budgets rows double as the capacity-add
             ops = (jnp.asarray(plan.budgets),
                    jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
-        return plan, ops, self._compiled_step(n_ticks, plan.retire)
+        else:
+            mode = "paged" if plan.pages is not None else "carry"
+            ops = (jnp.asarray(plan.mask), jnp.asarray(plan.budgets),
+                   jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
+            if mode == "paged":
+                ops = ops + (jnp.asarray(plan.pages.mint_tick),
+                             jnp.asarray(plan.pages.hot_slots))
+        return plan, mode, ops, self._compiled_step(n_ticks, mode)
 
     def tick_loop_fn(self, n_ticks: int):
         """The pure compiled tick loop for the upcoming chunk, as a
         zero-argument callable that does NOT advance state.  This is the
         benchmark hook that isolates the device scan from boundary work —
         symmetric with engine rounds/sec excluding ``generate_episode``."""
-        _, ops, step = self._plan_chunk(int(self.state.tick), n_ticks)
+        _, _, ops, step = self._plan_chunk(int(self.state.tick), n_ticks)
         state = self.state
         return lambda: step(state, ops)
 
@@ -258,7 +343,9 @@ class FlaasService:
 
         # plan this chunk's block mints; run the compiled scan; graft the
         # changed carries + ledger-metadata mirrors back onto the state.
-        plan, ops, step = self._plan_chunk(tick0, T)
+        # (In paged mode final[0] is the cold store with the hot ring
+        # already swept back in — the boundary eviction sweep.)
+        plan, mode, ops, step = self._plan_chunk(tick0, T)
         final, ys = step(self.state, ops)
         self._ledger_budget = plan.next_budget
         self._ledger_birth = plan.next_birth
@@ -272,6 +359,17 @@ class FlaasService:
         ys = {k: np.asarray(v) for k, v in ys.items()}
         if self.cfg.validate:
             self._check_conservation(ys)
+
+        # paging telemetry: hot-ring size/evictions/occupancy per chunk
+        self.telemetry.observe_chunk_mode(mode, T)
+        hot_evicted = ys.pop("hot_evicted", None)
+        hot_live = ys.pop("hot_live", None)
+        if hot_evicted is not None:
+            H = plan.pages.hot_size
+            MN = self.cfg.analyst_slots * self.cfg.pipeline_slots
+            self.telemetry.observe_paging(
+                pages_swept=H, slots_evicted=int(hot_evicted.sum()),
+                hot_occupancy=float(hot_live.mean()) / max(MN * H, 1))
 
         # 4. recycle granted + expired slots, record grant latencies,
         #    fold telemetry.

@@ -122,6 +122,79 @@ def admit_batch(state: ServiceState, mask, loss, arrival_seconds,
 
 
 @dataclasses.dataclass
+class PagePlan:
+    """One chunk's hot-ring page schedule (two-ring paged demand residency).
+
+    The chunk's mints can only touch the ring slots of the consecutive
+    global-bid window ``[tick0*bpr, tick0*bpr + H)`` — so only those ``H``
+    demand columns (the *hot ring*) can change inside the chunk, and the
+    only change is the retirement wipe at each slot's mint tick.  The full
+    ``[M, N, B]`` tensor (the *cold page store*) therefore stays a scan
+    constant; the hot ring's residency is *algebraic*: ``mint_tick[b]``
+    records when slot ``b`` is re-minted, and the tick body reconstructs
+    the current hot values by fusing the wipe predicate
+    ``(mint_tick <= t) & (spawn_tick < mint_tick)`` into the activity
+    mask it applies anyway (:class:`repro.core.demand.DemandView`).  The
+    chunk-boundary eviction sweep is one fused elementwise pass applying
+    the chunk's accumulated wipes to the cold store.
+
+    ``hot_slots`` additionally names the hot ring explicitly — the
+    chunk-level expiry/telemetry reductions are computed on a one-off
+    ``[M, N, H]`` gather of those columns instead of full-tensor passes.
+    The window is padded up to a multiple of the shard count so every
+    shard pages an equal-size stripe; padding slots carry
+    ``mint_tick == NEVER`` and behave exactly like cold columns.
+
+    Valid only while every slot is minted at most once per chunk
+    (``H <= B``); :func:`plan_pages` returns None when the hot window
+    *spills* and the caller falls back to carrying the full tensor.  The
+    layout composes with the striped sharded ring as-is: ``mint_tick`` is
+    a per-slot vector in the same (global) slot layout as the ledger, so
+    it shards with it and every wipe stays shard-local."""
+
+    mint_tick: np.ndarray    # [B] i32 — chunk tick re-minting the slot
+                             #   (NEVER where the chunk leaves it cold)
+    hot_slots: np.ndarray    # [S, Hp/S] i32 — LOCAL hot-ring slots per
+                             #   shard (incl. shard-alignment padding)
+    hot_size: int            # slots the chunk's mints touch (H, unpadded)
+
+
+def plan_pages(tick0: int, n_ticks: int, block_slots: int,
+               blocks_per_tick: int, slot_fn=None, n_shards: int = 1):
+    """The chunk's :class:`PagePlan`, or None when the hot window would
+    not fit in the ring (a slot would be minted twice within one chunk
+    and a single re-mint tick could not describe it)."""
+    S = int(n_shards)
+    B = block_slots
+    if B % S:
+        raise ValueError(f"block_slots={B} not divisible by {S} shards")
+    H = n_ticks * blocks_per_tick
+    Hp = -(-H // S) * S                  # shard-aligned hot window
+    if Hp > B:
+        return None
+    b0 = tick0 * blocks_per_tick
+    bids = np.arange(b0, b0 + Hp, dtype=np.int64)
+    slots = ((bids % B) if slot_fn is None else slot_fn(bids)).astype(
+        np.int64)
+    mint_tick = np.full(B, NEVER, np.int32)
+    minted = bids < b0 + H               # padding bids are not minted
+    mint_tick[slots[minted]] = (bids[minted] // blocks_per_tick).astype(
+        np.int32)
+    # shard s owns the contiguous global slot range [s*B/S, (s+1)*B/S);
+    # a window of Hp consecutive bids lands Hp/S slots on every shard
+    # under the striped layout (and trivially with S == 1).
+    owner = slots // (B // S)
+    local = slots % (B // S)
+    counts = np.bincount(owner, minlength=S)
+    if not (counts == Hp // S).all():    # layout does not stripe evenly
+        return None                      # -> carry fallback, still exact
+    hot_slots = np.empty((S, Hp // S), np.int32)
+    for s in range(S):
+        hot_slots[s] = local[owner == s]
+    return PagePlan(mint_tick=mint_tick, hot_slots=hot_slots, hot_size=H)
+
+
+@dataclasses.dataclass
 class MintPlan:
     """One chunk's block-mint schedule, fully precomputed on the host so
     the device scan applies it with engine-identical ops.
@@ -132,8 +205,11 @@ class MintPlan:
     mint op) plus ``budget_total``/``created`` directly, carrying only
     ``(done, capacity)`` — a service tick is then op-for-op an engine
     round.  Wrap chunks apply ``mask``/``budgets`` as selects (eviction =
-    set, not add) and carry demand through the scan.  ``next_*`` are the
-    host mirrors of the ledger metadata after the chunk."""
+    set, not add); the demand side of retirement is described by
+    ``pages`` (the two-ring paged layout — only the hot ring joins the
+    carry) with the full-tensor carry kept as the spill fallback.
+    ``next_*`` are the host mirrors of the ledger metadata after the
+    chunk."""
 
     mask: np.ndarray          # [T, B] bool — minted this tick
     budgets: np.ndarray       # [T, B] f32 — minted budget (0 elsewhere)
@@ -142,19 +218,22 @@ class MintPlan:
     retire: bool
     next_budget: np.ndarray   # [B] f32 host mirror after the chunk
     next_birth: np.ndarray    # [B] i32 host mirror after the chunk
+    pages: "PagePlan | None" = None   # hot-ring schedule (retire chunks)
 
 
 def plan_mints(tick0: int, n_ticks: int, block_slots: int,
                device_budget: np.ndarray, blocks_per_device: int,
                prev_budget: np.ndarray, prev_birth: np.ndarray,
-               slot_fn=None) -> MintPlan:
+               slot_fn=None, page_shards: int = 0) -> MintPlan:
     """Mint schedule for ticks ``[tick0, tick0 + n_ticks)``; ``prev_*``
     are the host ledger mirrors at the chunk boundary.
 
     ``slot_fn`` maps global block ids to ring slots (default ``bid % B``).
     Any layout whose slot is reused exactly by ``bid + B`` works — the
     sharded service uses a striped layout so each mesh shard owns the
-    ``bid % n_shards`` stripe (see :mod:`repro.shard`)."""
+    ``bid % n_shards`` stripe (see :mod:`repro.shard`).  ``page_shards``
+    > 0 additionally attaches a :class:`PagePlan` over that many shard
+    stripes to retire chunks (None when the hot window spills)."""
     n_devices = device_budget.shape[0]
     bpr = n_devices * blocks_per_device
     B = block_slots
@@ -180,9 +259,12 @@ def plan_mints(tick0: int, n_ticks: int, block_slots: int,
         birth[slots[i]] = tick0 + i
         created[i] = birth >= 0
         budget_total[i] = np.where(created[i], bud, 1.0)
+    retire = bool(bids.max() >= B)
+    pages = plan_pages(tick0, n_ticks, B, bpr, slot_fn, page_shards) \
+        if (retire and page_shards > 0) else None
     return MintPlan(mask=mask, budgets=budgets, budget_total=budget_total,
-                    created=created, retire=bool(bids.max() >= B),
-                    next_budget=bud, next_birth=birth)
+                    created=created, retire=retire,
+                    next_budget=bud, next_birth=birth, pages=pages)
 
 
 class SlotTable:

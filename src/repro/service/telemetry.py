@@ -57,6 +57,13 @@ class StreamingTelemetry:
         self._latency = _Reservoir(latency_reservoir, seed)
         self.grants = 0
         self.expired_pipelines = 0   # outlived every demanded block
+        # paged two-ring residency: per-chunk paging cost so the layout is
+        # observable, not just fast (see docs/service.md)
+        self.pages_swept = 0         # hot slots grafted back at boundaries
+        self.slots_evicted = 0       # stale demand entries wiped on mint
+        self._hot_occ_sum = 0.0
+        self._paged_chunks = 0
+        self.mode_ticks = {"wrapfree": 0, "carry": 0, "paged": 0}
 
     # ------------------------------------------------------------- updates
     def observe_chunk(self, ys: Dict[str, np.ndarray]) -> None:
@@ -74,6 +81,21 @@ class StreamingTelemetry:
         self._boundaries += 1
         self._queue_depth_sum += queue_depth
         self._queue_depth_max = max(self._queue_depth_max, queue_depth)
+
+    def observe_chunk_mode(self, mode: str, n_ticks: int) -> None:
+        """Which residency mode the chunk's tick loop ran in
+        (wrapfree / paged / carry)."""
+        self.mode_ticks[mode] = self.mode_ticks.get(mode, 0) + int(n_ticks)
+
+    def observe_paging(self, pages_swept: int, slots_evicted: int,
+                       hot_occupancy: float) -> None:
+        """One paged chunk's hot-ring cost: slots swept back into the cold
+        store at the boundary, stale demand entries evicted by mints, and
+        the mean fraction of hot-ring entries holding live demand."""
+        self.pages_swept += int(pages_swept)
+        self.slots_evicted += int(slots_evicted)
+        self._hot_occ_sum += float(hot_occupancy)
+        self._paged_chunks += 1
 
     def observe_expired(self, n: int) -> None:
         """Pipelines completed-with-nothing because every block they
@@ -105,6 +127,13 @@ class StreamingTelemetry:
             max(self._boundaries, 1),
             "queue_depth_max": self._queue_depth_max,
             "grant_latency_ticks": self._latency.percentiles((50, 90, 99)),
+            "paging": {
+                "mode_ticks": dict(self.mode_ticks),
+                "pages_swept": self.pages_swept,
+                "slots_evicted": self.slots_evicted,
+                "hot_occupancy_mean": self._hot_occ_sum /
+                max(self._paged_chunks, 1),
+            },
         }
         if admission:
             out["admission"] = dict(admission)

@@ -60,33 +60,50 @@ _DIAG_REPLICATED = ("utility", "analyst_mask", "a_i", "mu_i", "x_analyst",
                     "sp1_violation")
 
 
-def _ys_specs(retire: bool, diagnostics: bool) -> Dict[str, P]:
+def _ys_specs(mode: str, diagnostics: bool) -> Dict[str, P]:
     ys = {k: P() for k in _METRIC_KEYS}
-    if retire:
+    if mode != "wrapfree":
         ys["expired"] = P()
+    if mode == "paged":     # paging telemetry: post-psum scalars
+        ys["hot_evicted"] = P()
+        ys["hot_live"] = P()
     if diagnostics:
         ys.update({k: P() for k in _DIAG_REPLICATED})
         ys.update(_DIAG_SPECS)
     return ys
 
 
+def _op_specs(mode: str):
+    """shard_map in_specs for the mint-op tuple of ``mode``.  The [T, B]
+    rows shard their slot axis; the paged extras — the [B] per-slot
+    ``mint_tick`` vector and the [S, Hp/S] local hot-ring slot table —
+    shard with the ledger, handing each shard its own stripe's retirement
+    schedule."""
+    if mode == "paged":
+        return (P(None, AXIS),) * 4 + (P(AXIS), P(AXIS, None))
+    return (P(None, AXIS),) * (4 if mode == "carry" else 3)
+
+
 @functools.lru_cache(maxsize=64)
 def _sharded_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
-                   retire: bool, diagnostics: bool, mesh):
+                   mode: str, diagnostics: bool, mesh):
     """Compiled shard_map'd analogue of ``server._compiled_chunk``: the
     SAME ``_chunk_metrics`` body, with every block-axis operand passed as
     a local stripe and the cross-shard reductions routed through
-    ``BlockAxis(AXIS)``."""
+    ``BlockAxis(AXIS)``.  In paged mode each shard applies its own
+    stripe's retirement schedule (``mint_tick`` shards with the ledger)
+    and sweeps its own cold store — retirement adds no cross-shard
+    traffic."""
     round_fn = get_round_fn(scheduler)
     fn = functools.partial(
         _chunk_metrics, cfg=cfg, round_fn=round_fn, n_ticks=n_ticks,
-        retire=retire, diagnostics=diagnostics, block_axis=BlockAxis(AXIS))
-    n_ops = 4 if retire else 3
-    carry = (P(None, None, AXIS), P(), P(AXIS)) if retire else (P(), P(AXIS))
+        mode=mode, diagnostics=diagnostics, block_axis=BlockAxis(AXIS))
+    carry = (P(None, None, AXIS), P(), P(AXIS)) if mode != "wrapfree" \
+        else (P(), P(AXIS))
     sm = compat.shard_map(
         fn, mesh=mesh,
-        in_specs=(state_specs(), (P(None, AXIS),) * n_ops),
-        out_specs=(carry, _ys_specs(retire, diagnostics)),
+        in_specs=(state_specs(), _op_specs(mode)),
+        out_specs=(carry, _ys_specs(mode, diagnostics)),
         # check_rep/check_vma chokes on collectives under scan/while_loop
         # on older jax; replication of the P() outputs is guaranteed by
         # construction (they are all post-collective values).
@@ -142,7 +159,6 @@ class ShardedFlaasService(FlaasService):
         self.sharded = None
         self._boot_mesh = mesh
         super().__init__(cfg, trace)
-        self._ops_sharding = NamedSharding(mesh, P(None, AXIS))
         self.shard_live_blocks = np.zeros(mesh_shards(mesh), np.int64)
         self.free_pipeline_slots = cfg.analyst_slots * cfg.pipeline_slots
 
@@ -173,16 +189,23 @@ class ShardedFlaasService(FlaasService):
     def _slot_of(self, bids: np.ndarray) -> np.ndarray:
         return self.sharded.slot_of(bids)
 
+    def _page_shards(self) -> int:
+        # each mesh shard pages its own `bid % S` stripe: the hot-ring
+        # gather, wipes and boundary sweep are entirely shard-local.
+        return mesh_shards(self.mesh)
+
     # -------------------------------------------------------------- chunk
-    def _compiled_step(self, n_ticks: int, retire: bool):
+    def _compiled_step(self, n_ticks: int, mode: str):
         step = _sharded_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
-                              retire, self.cfg.diagnostics, self.mesh)
-        ops_sharding = self._ops_sharding
+                              mode, self.cfg.diagnostics, self.mesh)
+        shardings = tuple(NamedSharding(self.mesh, spec)
+                          for spec in _op_specs(mode))
 
         def run(state, ops):
             # state is mesh-committed by the `state` setter; the mint-plan
             # operands are host-built per chunk and committed here.
-            ops = tuple(jax.device_put(op, ops_sharding) for op in ops)
+            ops = tuple(jax.device_put(op, s)
+                        for op, s in zip(ops, shardings))
             return step(state, ops)
 
         return run

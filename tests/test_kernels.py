@@ -132,3 +132,96 @@ class TestHotpathDispatch:
         for dim in (1, 5, 6, 100, 123, 2000, 4096):
             b = _pick_block(dim, 256)
             assert dim % b == 0 and 1 <= b <= min(dim, 256)
+
+
+class TestBoostScanKernel:
+    """SP2's fused boost sweep (one VMEM-resident divide/min/update pass
+    over K per visited pipeline) must be BITWISE-identical to the jnp
+    ``lax.scan`` reference — it replaces the scan inside
+    ``proportional_boost``, whose outputs feed argmax tie resolution in
+    the swap engine, so allclose is not enough."""
+
+    def _instance(self, key, N, K, kappa=2.0):
+        ks = jax.random.split(key, 3)
+        g = jax.random.uniform(ks[0], (N, K), jnp.float32) * \
+            (jax.random.uniform(ks[1], (N, K)) > 0.5)
+        sel = jax.random.uniform(ks[2], (N,)) > 0.4
+        left = jax.random.uniform(ks[0], (K,), jnp.float32) * 2.0
+        return g, sel, left
+
+    @pytest.mark.parametrize("N,K", [(4, 16), (7, 33), (25, 200), (1, 1)])
+    @pytest.mark.parametrize("kappa", [1.0, 2.0, 8.0])
+    def test_bitwise_vs_ref(self, N, K, kappa):
+        g, sel, left = self._instance(KEY, N, K)
+        extras, lout = ops.boost_scan_op(g, sel, left, kappa_max=kappa)
+        e_ref, l_ref = ref.boost_scan_ref(g, sel, left, kappa)
+        np.testing.assert_array_equal(np.asarray(extras), np.asarray(e_ref))
+        np.testing.assert_array_equal(np.asarray(lout), np.asarray(l_ref))
+
+    def test_degenerate_rows(self):
+        # zero-demand rows (infinite water level -> kappa cap) and
+        # nothing-selected both take the documented closed forms
+        g = jnp.zeros((3, 8), jnp.float32).at[1].set(0.5)
+        sel = jnp.asarray([True, True, False])
+        left = jnp.ones((8,), jnp.float32)
+        extras, lout = ops.boost_scan_op(g, sel, left, kappa_max=2.0)
+        e_ref, l_ref = ref.boost_scan_ref(g, sel, left, 2.0)
+        np.testing.assert_array_equal(np.asarray(extras), np.asarray(e_ref))
+        np.testing.assert_array_equal(np.asarray(lout), np.asarray(l_ref))
+        extras0, _ = ops.boost_scan_op(g, jnp.zeros(3, bool), left,
+                                       kappa_max=2.0)
+        assert (np.asarray(extras0) == 0).all()
+
+    def test_vmapped_over_analysts_and_candidates(self):
+        # pack_all vmaps the sweep over analysts; the swap engine adds a
+        # second candidate axis — both must batch through pallas_call
+        ks = jax.random.split(KEY, 3)
+        g = jax.random.uniform(ks[0], (3, 4, 6, 32), jnp.float32)
+        sel = jax.random.uniform(ks[1], (3, 4, 6)) > 0.4
+        left = jax.random.uniform(ks[2], (3, 4, 32), jnp.float32)
+        fn = lambda g_, s_, l_: ops.boost_scan_op(g_, s_, l_, kappa_max=2.0)
+        e, l = jax.vmap(jax.vmap(fn))(g, sel, left)
+        er, lr = jax.vmap(jax.vmap(
+            lambda g_, s_, l_: ref.boost_scan_ref(g_, s_, l_, 2.0)))(
+                g, sel, left)
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(er))
+        np.testing.assert_array_equal(np.asarray(l), np.asarray(lr))
+
+    def test_hotpath_dispatch_matches_jnp_path(self):
+        # the two sides of the SchedulerConfig(use_pallas) switch
+        from repro.core import hotpath
+        g, sel, left = self._instance(KEY, 9, 41)
+        l_jnp, e_jnp = hotpath.boost_scan(g, sel, left, 2.0,
+                                          use_pallas=False)
+        l_pal, e_pal = hotpath.boost_scan(g, sel, left, 2.0,
+                                          use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(e_jnp), np.asarray(e_pal))
+        np.testing.assert_array_equal(np.asarray(l_jnp), np.asarray(l_pal))
+
+    def test_full_round_parity_with_pallas_boost(self):
+        # a whole dpbalance round with use_pallas on: selections match the
+        # jnp path exactly (the boost kernel is bitwise; SP1's matvec
+        # kernel reassociates sums, so continuous outputs are allclose)
+        import dataclasses as dc
+
+        from repro.core import SchedulerConfig, schedule_round
+        from repro.core.demand import RoundInputs
+        rng = np.random.default_rng(5)
+        M, N, K = 2, 5, 12
+        rnd = RoundInputs(
+            demand=jnp.asarray(rng.uniform(0, 0.2, (M, N, K)) *
+                               (rng.random((M, N, K)) > 0.5), jnp.float32),
+            active=jnp.ones((M, N), bool),
+            arrival=jnp.zeros((M, N), jnp.float32),
+            loss=jnp.asarray(rng.uniform(0.5, 1, (M, N)), jnp.float32),
+            capacity=jnp.asarray(rng.uniform(0.5, 1.5, K), jnp.float32),
+            budget_total=jnp.ones((K,), jnp.float32),
+            now=jnp.asarray(0.0, jnp.float32))
+        cfg = SchedulerConfig(beta=2.2)
+        a = schedule_round(rnd, cfg)
+        b = schedule_round(rnd, dc.replace(cfg, use_pallas=True))
+        np.testing.assert_array_equal(np.asarray(a.selected),
+                                      np.asarray(b.selected))
+        np.testing.assert_allclose(np.asarray(a.x_pipeline),
+                                   np.asarray(b.x_pipeline),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests for the paged two-ring bookkeeping.
+
+Optional-dep-safe (same pattern as ``test_swap_properties.py``): the
+module skips itself when ``hypothesis`` is missing.  Two invariant
+families under random admit/expire/evict churn:
+
+* :class:`~repro.service.state.SlotTable` free-list consistency — rows
+  are owned iff occupied, identities are unique, released slots carry no
+  stale metadata;
+* :class:`~repro.service.state.PagePlan` schedules — spills are always
+  detected, minted slots carry exactly their in-chunk mint tick, hot
+  stripes are equal-size / local-range / duplicate-free and cover every
+  minted slot.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests require hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.service import SlotTable, plan_pages
+from repro.service.state import NEVER
+from repro.shard import ring_slots
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_slot_table_invariants_under_churn(data):
+    M = data.draw(st.integers(1, 4), label="rows")
+    N = data.draw(st.integers(1, 5), label="cols")
+    table = SlotTable(M, N)
+    for step in range(data.draw(st.integers(1, 30), label="steps")):
+        if data.draw(st.booleans(), label=f"admit@{step}"):
+            analyst = data.draw(st.integers(0, 6), label=f"a@{step}")
+            n_pipes = data.draw(st.integers(1, N), label=f"n@{step}")
+            placed = table.row_for(analyst, n_pipes)
+            if placed is not None:
+                row, cols = placed
+                assert not table.occupied[row, cols].any()
+                table.commit(analyst, row, cols, submit_tick=step)
+        else:                           # random grant/expire -> recycle
+            done = np.zeros((M, N), bool)
+            flat = data.draw(
+                st.lists(st.integers(0, M * N - 1), max_size=M * N),
+                label=f"done@{step}")
+            done.reshape(-1)[list(set(flat))] = True
+            table.release_done(done)
+        # --- invariants ---
+        owned = set(np.where(table.row_owner != -1)[0].tolist())
+        free = set(table._free_rows)
+        assert owned.isdisjoint(free)
+        assert owned | free == set(range(M))
+        for r in range(M):              # owned <=> occupied
+            assert (r in owned) == bool(table.occupied[r].any())
+        # released slots carry no stale submit tick
+        assert (table.submit_tick[~table.occupied] == -1).all()
+        # one row per live analyst identity
+        live = table.row_owner[table.row_owner != -1]
+        assert len(set(live.tolist())) == live.size
+        assert table.free_pipeline_slots() == int((~table.occupied).sum())
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_page_plan_schedule_invariants(data):
+    S = data.draw(st.sampled_from([1, 2, 4]), label="shards")
+    per = data.draw(st.integers(2, 12), label="slots_per_shard")
+    B = S * per
+    bpr = data.draw(st.integers(1, 2 * B), label="bpr")
+    T = data.draw(st.integers(1, 6), label="ticks")
+    tick0 = data.draw(st.integers(0, 50), label="tick0")
+    slot_fn = None if S == 1 else (lambda b: ring_slots(b, S, B))
+    pages = plan_pages(tick0, T, B, bpr, slot_fn, S)
+    if (-(-(T * bpr) // S) * S) > B:
+        assert pages is None            # spill is always detected
+        return
+    assert pages is not None
+    mt = pages.mint_tick
+    minted = mt != NEVER
+    # minted slots carry exactly their in-chunk mint tick
+    assert minted.sum() == pages.hot_size == T * bpr
+    assert (mt[minted] >= tick0).all() and (mt[minted] < tick0 + T).all()
+    # hot stripes: equal-size, local-range, duplicate-free, covering
+    assert pages.hot_slots.shape[0] == S
+    assert pages.hot_slots.size >= pages.hot_size
+    covered = set()
+    for s in range(S):
+        row = pages.hot_slots[s]
+        assert ((0 <= row) & (row < per)).all()
+        assert len(set(row.tolist())) == row.size
+        covered |= {s * per + int(x) for x in row}
+    assert set(np.where(minted)[0].tolist()) <= covered
