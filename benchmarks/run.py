@@ -128,6 +128,51 @@ def smoke() -> tuple:
               file=sys.stderr)
         failures += 1
 
+    # checkpoint_restore smoke: crash-recovery round trip — run k chunks,
+    # checkpoint, restore into a fresh in-process service, finish the run;
+    # bitwise summary parity vs the uninterrupted run is ASSERTED (the
+    # wall-clock-stripped fingerprint), restore latency reported.
+    try:
+        import json as _json
+        import tempfile
+
+        from repro.checkpoint import CheckpointManager
+        from repro.service import summary_fingerprint
+
+        trace = make_trace("paper_default", "poisson", seed=0, n_devices=4,
+                           pipelines_per_analyst=6)
+        def ckpt_svc():
+            return FlaasService(ServiceConfig(
+                scheduler="dpf", sched=cfg, analyst_slots=4,
+                pipeline_slots=6, block_slots=10 * trace.blocks_per_tick,
+                chunk_ticks=4, admit_batch=8, max_pending=32),
+                trace.reset())
+        ref = ckpt_svc()
+        ref.run(24)
+        crashed = ckpt_svc()
+        crashed.run(12)
+        with tempfile.TemporaryDirectory() as ckdir:
+            mgr = CheckpointManager(ckdir)
+            t0 = time.perf_counter()
+            crashed.save_checkpoint(mgr)
+            mgr.wait()
+            resumed = ckpt_svc()
+            resumed.load_checkpoint(mgr)
+            us_roundtrip = (time.perf_counter() - t0) * 1e6
+        resumed.run(12)
+        fa = _json.dumps(summary_fingerprint(ref.summary()), sort_keys=True)
+        fb = _json.dumps(summary_fingerprint(resumed.summary()),
+                         sort_keys=True)
+        if fa != fb:
+            raise AssertionError("checkpoint/restore resume parity violated")
+        rows.append(("smoke/checkpoint_restore", us_roundtrip, derived(
+            resumed_ticks=12, parity=1)))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/checkpoint_restore,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
     # shard_throughput smoke: the sharded service over however many
     # devices the runner has (1 on a plain CPU; the sharded CI job runs
     # with an 8-device emulated mesh), ring wrap included.

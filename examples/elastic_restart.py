@@ -1,76 +1,117 @@
-"""Fault-tolerance demo: crash mid-training, restore, and survive losing
-half the FL fleet — the run completes with identical post-restore math.
+"""Service-plane crash recovery + elastic resharding demo.
+
+Three acts:
+
+1. **Crash mid-stream** — a FlaasService runs half its workload, saves a
+   durable checkpoint at a chunk boundary, and "crashes".
+2. **Bitwise resume** — a fresh process (fresh service object, fresh
+   compiled functions) restores the checkpoint and finishes the run; its
+   telemetry fingerprint and final device state match the uninterrupted
+   control run bit-for-bit.
+3. **Elastic hand-off** — the same checkpoint restores onto a block-axis
+   sharded mesh (and back): the striped-ring remap permutes the ledger so
+   scheduling continues on a different shard count (needs >= 4 devices,
+   e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8; skipped
+   gracefully otherwise).
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import functools
+import json
 import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import get_arch, reduced
-from repro.data.blocks import DeviceDataset
-from repro.training import (DPConfig, FedAvgConfig, TrainConfig, fl_round,
-                            make_loss_fn, make_state, train_step)
+from repro.core import SchedulerConfig
+from repro.service import (FlaasService, ServiceConfig, make_trace,
+                           summary_fingerprint)
 
-CKPT = "/tmp/elastic_demo_ckpt"
+CKPT = "/tmp/elastic_service_ckpt"
+TOTAL, HALF = 24, 12
 
 
-def batch(cfg, i):
-    rng = np.random.default_rng(i)
-    t = rng.integers(0, cfg.vocab, (4, 33))
-    return {"tokens": jnp.asarray(t[:, :-1]), "labels": jnp.asarray(t[:, 1:])}
+def make_service(n_shards=None):
+    """Fresh service over a deterministic trace; the 80-slot ring covers
+    10 ticks, so both run halves wrap it (retirement exercised)."""
+    trace = make_trace("paper_default", "poisson", seed=7, n_devices=4,
+                       pipelines_per_analyst=6)
+    cfg = ServiceConfig(scheduler="dpbalance", sched=SchedulerConfig(beta=2.2),
+                        analyst_slots=4, pipeline_slots=6, block_slots=80,
+                        chunk_ticks=4, admit_batch=8, max_pending=64)
+    if n_shards is None:
+        return FlaasService(cfg, trace)
+    from repro.shard import ShardedFlaasService
+    return ShardedFlaasService(cfg, trace, n_shards=n_shards)
+
+
+def fingerprint(service):
+    return json.dumps(summary_fingerprint(service.summary()), sort_keys=True)
 
 
 def main():
     shutil.rmtree(CKPT, ignore_errors=True)
-    cfg = reduced(get_arch("flaas-100m"))
-    tcfg = TrainConfig(optimizer="adamw", lr=1e-3, param_dtype="float32",
-                       dp=DPConfig(clip=1.0, noise_multiplier=0.3, n_micro=2))
-    state = make_state(jax.random.PRNGKey(0), cfg, tcfg)
-    step = jax.jit(functools.partial(train_step, cfg=cfg, tcfg=tcfg))
+
+    print(f"control: uninterrupted {TOTAL}-tick run ...")
+    control = make_service()
+    control.run(TOTAL)
+    print(f"  allocated={control.summary()['total_allocated']} "
+          f"grants={control.summary()['grants']}")
+
+    print(f"act 1: run {HALF} ticks, checkpoint, crash ...")
+    doomed = make_service()
+    doomed.run(HALF)
     mgr = CheckpointManager(CKPT, keep_n=2)
+    step = doomed.save_checkpoint(mgr)
+    mgr.wait()
+    del doomed                                  # ** simulated crash **
+    print(f"  durable checkpoint at tick {step}: device state + slot "
+          f"table + queue + telemetry + trace cursor")
 
-    print("training 6 steps, checkpoint at 4 ...")
-    for i in range(6):
-        state, m = step(state, batch(cfg, i))
-        if i == 3:
-            mgr.save(4, state)
-    loss_before_crash = float(m["loss"])
-    print(f"  step 6 loss={loss_before_crash:.4f}   ** simulated crash **")
+    print("act 2: fresh process restores and finishes ...")
+    resumed = make_service()
+    at = resumed.load_checkpoint(CheckpointManager(CKPT))
+    resumed.run(TOTAL - at)
+    bitwise = fingerprint(resumed) == fingerprint(control)
+    same_state = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(control.state),
+                        jax.tree.leaves(resumed.state)))
+    print(f"  resumed at tick {at}; summary fingerprint match: {bitwise}; "
+          f"device state bitwise match: {same_state}")
+    assert bitwise and same_state
 
-    print("restarting from checkpoint ...")
-    restored, at = mgr.restore(jax.device_get(state))
-    state2 = jax.tree.map(jnp.asarray, restored)
-    print(f"  resumed at step {at}")
-    for i in range(4, 6):
-        state2, m2 = step(state2, batch(cfg, i))
-    print(f"  replayed to step 6 loss={float(m2['loss']):.4f} "
-          f"(bitwise match: {abs(float(m2['loss']) - loss_before_crash) == 0.0})")
-
-    print("elastic FL: 10-device fleet loses 6 devices mid-run ...")
-    loss_fn = make_loss_fn(cfg)
-    params = state2["params"]
-    def loader(dev):
-        def load():
-            ds = DeviceDataset(dev, tokens_per_block=128, vocab=cfg.vocab)
-            t = ds.sample([0], 33, 2, seed=dev)
-            return [{"tokens": jnp.asarray(t[:, :-1]),
-                     "labels": jnp.asarray(t[:, 1:])}]
-        return load
-    fleet = list(range(10))
-    for rnd in range(4):
-        live = fleet if rnd < 2 else fleet[:4]     # failure at round 2
-        data = {d: loader(d) for d in live}
-        params, metr = fl_round(params, loss_fn, data, live,
-                                FedAvgConfig(cohort_size=5, seed=rnd),
-                                sigma=0.1, round_idx=rnd)
-        print(f"  round {rnd}: live={len(live)} cohort={metr['cohort']} "
-              f"dropped={metr['stragglers_dropped']}")
-    print("done — no round stalled.")
+    if len(jax.devices()) >= 4:
+        print("act 3: elastic hand-off — restore the 1-shard checkpoint "
+              "onto a 4-shard mesh ...")
+        wide = make_service(n_shards=4)
+        at = wide.load_checkpoint(CheckpointManager(CKPT))
+        wide.run(TOTAL - at)
+        s = wide.summary()
+        drift = abs(s["cumulative_efficiency"] -
+                    control.summary()["cumulative_efficiency"])
+        print(f"  4-shard continuation from tick {at}: "
+              f"allocated={s['total_allocated']} "
+              f"(vs control {control.summary()['total_allocated']}), "
+              f"efficiency drift {drift:.2e}")
+        print("  ... and back: checkpoint the 4-shard run, restore 1-shard")
+        shutil.rmtree(CKPT, ignore_errors=True)
+        mgr = CheckpointManager(CKPT)
+        half_wide = make_service(n_shards=4)
+        half_wide.run(HALF)
+        half_wide.save_checkpoint(mgr)
+        mgr.wait()
+        narrow = make_service()
+        at = narrow.load_checkpoint(mgr)
+        narrow.run(TOTAL - at)
+        drift = abs(narrow.summary()["cumulative_efficiency"] -
+                    control.summary()["cumulative_efficiency"])
+        print(f"  1-shard continuation from tick {at}: efficiency drift "
+              f"{drift:.2e}")
+    else:
+        print("act 3 skipped: needs >= 4 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    print("done.")
 
 
 if __name__ == "__main__":

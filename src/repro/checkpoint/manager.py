@@ -7,11 +7,21 @@ loop mid-run and verify bitwise resume).  On multi-host deployments only
 process 0 writes (each host holds identical addressable shards for our DP/TP
 layout after an all-gather; for genuinely sharded arrays, callers pass
 `gather=False` to save per-host shards side-by-side).
+
+Beyond array pytrees, a checkpoint can carry a *host payload*: any
+picklable object (queue contents, free lists, RNG bit-generator states,
+telemetry counters) saved alongside the arrays inside the same atomic step
+directory.  This is what lets a whole service plane — device state plus
+every host-side mirror — checkpoint and restore as one unit (see
+``FlaasService.save_checkpoint``).  The payload is serialized eagerly in
+``save()`` so async saves snapshot live mutable objects before the caller
+can touch them again.
 """
 from __future__ import annotations
 
 import json
 import os
+import pickle
 import re
 import shutil
 import tempfile
@@ -58,27 +68,54 @@ class CheckpointManager:
         self.keep_n = keep_n
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # ----------------------------------------------------------------- save
-    def save(self, step: int, state: Any, metadata: Optional[dict] = None):
+    def save(self, step: int, state: Any, metadata: Optional[dict] = None,
+             host_state: Any = None):
+        """Write one checkpoint.  ``state`` is an array pytree;
+        ``host_state`` is any picklable object saved alongside it in the
+        same atomic step directory (both are snapshotted here, before an
+        async save returns)."""
         state = jax.device_get(state)
+        host_blob = None if host_state is None else pickle.dumps(
+            host_state, protocol=pickle.HIGHEST_PROTOCOL)
         if self.async_save:
-            self.wait()
+            self.wait()                 # re-raises a prior failed save
             self._thread = threading.Thread(
-                target=self._save_sync, args=(step, state, metadata))
+                target=self._save_worker, args=(step, state, metadata,
+                                                host_blob))
             self._thread.start()
         else:
-            self._save_sync(step, state, metadata)
+            self._save_sync(step, state, metadata, host_blob)
 
-    def _save_sync(self, step: int, state, metadata):
+    def _save_worker(self, step, state, metadata, host_blob):
+        # Runs on the save thread: a raised exception would otherwise die
+        # with the thread and the caller would believe the checkpoint
+        # exists.  Capture it; wait() / the next save() re-raises.
+        try:
+            self._save_sync(step, state, metadata, host_blob)
+        except BaseException as e:      # noqa: BLE001 — must not be lost
+            self._error = e
+
+    def _save_sync(self, step: int, state, metadata, host_blob=None):
         flat = _flatten(state)
         tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
         try:
             np.savez(os.path.join(tmp, "state.npz"), **flat)
+            if host_blob is not None:
+                with open(os.path.join(tmp, "host.pkl"), "wb") as f:
+                    f.write(host_blob)
             meta = {"step": int(step), **(metadata or {})}
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
+            # mkdtemp creates 0700 dirs; the rename would carry that mode
+            # onto the final checkpoint and a hand-off to another
+            # user/process could not read it.  Honor the umask instead.
+            umask = os.umask(0)
+            os.umask(umask)
+            os.chmod(tmp, 0o777 & ~umask)
             final = os.path.join(self.dir, f"step_{step:010d}")
             if os.path.exists(final):
                 shutil.rmtree(final)
@@ -89,9 +126,14 @@ class CheckpointManager:
         self._gc()
 
     def wait(self):
+        """Join an in-flight async save; raises the save thread's
+        exception, if any (the failed step was never renamed into place)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         steps = self.all_steps()
@@ -112,13 +154,23 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, template: Any, step: Optional[int] = None):
+    def restore(self, template: Any, step: Optional[int] = None,
+                with_host: bool = False):
         """Restore into the structure/dtypes of `template`.  Returns
-        (state, step) or (None, None) when no checkpoint exists."""
+        (state, step) — or (state, host_state, step) when ``with_host``
+        is set — with every element None when no checkpoint exists."""
         step = step if step is not None else self.latest_step()
         if step is None:
-            return None, None
-        path = os.path.join(self.dir, f"step_{step:010d}", "state.npz")
-        with np.load(path) as z:
+            return (None, None, None) if with_host else (None, None)
+        base = os.path.join(self.dir, f"step_{step:010d}")
+        with np.load(os.path.join(base, "state.npz")) as z:
             flat = {k: z[k] for k in z.files}
-        return _unflatten(template, flat), step
+        state = _unflatten(template, flat)
+        if not with_host:
+            return state, step
+        host = None
+        host_path = os.path.join(base, "host.pkl")
+        if os.path.exists(host_path):
+            with open(host_path, "rb") as f:
+                host = pickle.load(f)
+        return state, host, step

@@ -15,7 +15,7 @@ from .replay import (PARITY_KEYS, collect_service_metrics, freeze_trace,
 from .server import FlaasService, ServiceConfig
 from .state import (NEVER, MintPlan, PagePlan, ServiceState, SlotTable,
                     admit_batch, plan_mints, plan_pages)
-from .telemetry import StreamingTelemetry
+from .telemetry import StreamingTelemetry, summary_fingerprint
 from .traces import (PATTERNS, ArrivalTrace, PrecomputedTrace, Submission,
                      make_trace)
 
@@ -24,6 +24,6 @@ __all__ = [
     "collect_service_metrics", "freeze_trace", "replay_gap", "FlaasService",
     "ServiceConfig", "NEVER", "MintPlan", "PagePlan", "ServiceState",
     "SlotTable", "admit_batch", "plan_mints", "plan_pages",
-    "StreamingTelemetry", "PATTERNS", "ArrivalTrace",
+    "StreamingTelemetry", "summary_fingerprint", "PATTERNS", "ArrivalTrace",
     "PrecomputedTrace", "Submission", "make_trace",
 ]

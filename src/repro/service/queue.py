@@ -8,14 +8,21 @@ the server drains up to ``admit_batch`` of them into free slots of the
 * **deferred** — the table is full or the analyst's row has no free
   columns; the submission stays queued, FIFO order preserved (head-of-line
   blocking is deliberate: skipping ahead would starve large batches);
-* **rejected** — the queue itself is full (``max_pending``); backpressure
-  is the only load-shedding mechanism, and the caller sees the count.
+* **rejected** — the queue itself is full (``max_pending``), or the
+  submission asks for more pipelines than a row can ever hold
+  (``max_pipelines``) and would head-of-line block the FIFO forever;
+  backpressure and that structural check are the only load-shedding
+  mechanisms, and the caller sees both counts.
+
+Head-of-line deferrals are counted (``AdmissionStats.deferred``) so a
+stalled queue is distinguishable from an empty one in
+``telemetry.summary()`` (``deferral_rate``).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from .state import SlotTable
 from .traces import Submission
@@ -25,7 +32,9 @@ from .traces import Submission
 class AdmissionStats:
     offered: int = 0          # submissions handed to offer()
     admitted: int = 0
-    rejected: int = 0         # dropped by backpressure
+    rejected: int = 0         # dropped: backpressure or structurally unfit
+    rejected_oversize: int = 0  # subset of rejected: could never fit a row
+    deferred: int = 0         # head-of-line deferral events at drain()
     pipelines_admitted: int = 0
 
     def snapshot(self) -> dict:
@@ -33,10 +42,16 @@ class AdmissionStats:
 
 
 class AdmissionQueue:
-    """Bounded FIFO of pending submissions (host side)."""
+    """Bounded FIFO of pending submissions (host side).
 
-    def __init__(self, max_pending: int = 1024):
+    ``max_pipelines`` (the slot table's column count, when given) rejects
+    submissions at ``offer`` time that no row could ever hold — deferring
+    them would head-of-line block the FIFO forever."""
+
+    def __init__(self, max_pending: int = 1024,
+                 max_pipelines: Optional[int] = None):
         self.max_pending = max_pending
+        self.max_pipelines = max_pipelines
         self.pending: deque = deque()
         self.stats = AdmissionStats()
 
@@ -56,7 +71,12 @@ class AdmissionQueue:
         rejected = 0
         for sub in subs:
             self.stats.offered += 1
-            if len(self.pending) >= self.max_pending:
+            if (self.max_pipelines is not None
+                    and sub.n_pipelines > self.max_pipelines):
+                rejected += 1
+                self.stats.rejected += 1
+                self.stats.rejected_oversize += 1
+            elif len(self.pending) >= self.max_pending:
                 rejected += 1
                 self.stats.rejected += 1
             else:
@@ -71,12 +91,14 @@ class AdmissionQueue:
         them to device state (the server activates each at
         ``max(submit_tick, boundary)``, so prefetched arrivals activate at
         their arrival tick and deferred ones as soon as admitted).  Stops
-        at the first submission that does not fit (FIFO)."""
+        at the first submission that does not fit (FIFO); each such stop
+        with work still queued counts one head-of-line deferral."""
         placements = []
         while self.pending and len(placements) < admit_batch:
             sub = self.pending[0]
             placed = table.row_for(sub.analyst, sub.n_pipelines)
             if placed is None:
+                self.stats.deferred += 1
                 break
             row, cols = placed
             table.commit(sub.analyst, row, cols, sub.submit_tick)
@@ -85,3 +107,14 @@ class AdmissionQueue:
             self.stats.pipelines_admitted += sub.n_pipelines
             placements.append((sub, row, cols))
         return placements
+
+    # ------------------------------------------------------------ durability
+    def state_dict(self) -> dict:
+        """Snapshot for :meth:`FlaasService.save_checkpoint`: the pending
+        FIFO (order preserved) and the cumulative counters."""
+        return {"pending": list(self.pending),
+                "stats": self.stats.snapshot()}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.pending = deque(d["pending"])
+        self.stats = AdmissionStats(**d["stats"])

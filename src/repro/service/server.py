@@ -41,6 +41,9 @@ from .state import NEVER, ServiceState, SlotTable, admit_batch, plan_mints
 from .telemetry import StreamingTelemetry
 from .traces import ArrivalTrace, demand_window_ticks
 
+# Bump when checkpoint_host_state()'s schema changes incompatibly.
+_CHECKPOINT_VERSION = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
@@ -254,7 +257,8 @@ class FlaasService:
         self.state = ServiceState.create(cfg.analyst_slots,
                                          cfg.pipeline_slots, cfg.block_slots)
         self.table = SlotTable(cfg.analyst_slots, cfg.pipeline_slots)
-        self.queue = AdmissionQueue(cfg.max_pending)
+        self.queue = AdmissionQueue(cfg.max_pending,
+                                    max_pipelines=cfg.pipeline_slots)
         self.telemetry = StreamingTelemetry(cfg.latency_reservoir,
                                             seed=trace.seed)
         # host mirrors of the ledger metadata (MintPlan precomputes the
@@ -291,6 +295,13 @@ class FlaasService:
     def _page_shards(self) -> int:
         """Shard count the hot ring is paged over.  Subclass hook: the
         sharded service pages each mesh shard's own ``bid % S`` stripe."""
+        return 1
+
+    def _ring_layout_shards(self) -> int:
+        """Stripe count of the ledger-ring layout ``_slot_of`` implements
+        (1 = the plain ``bid % B`` ring).  Recorded in every checkpoint so
+        a restore onto a different shard count can remap the block axis
+        (see :meth:`load_checkpoint`)."""
         return 1
 
     def _compiled_step(self, n_ticks: int, mode: str):
@@ -403,6 +414,92 @@ class FlaasService:
     def summary(self) -> Dict:
         return self.telemetry.summary(admission=self.queue.stats.snapshot(),
                                       wall_seconds=self._wall)
+
+    # ----------------------------------------------------------- durability
+    def checkpoint_host_state(self) -> Dict:
+        """Everything the device pytree does not carry: ledger-metadata
+        mirrors, slot table, admission queue, telemetry, and the trace
+        cursor.  Restoring this plus the device state into a fresh process
+        resumes the service bitwise (same grants, same draws, same
+        summary fingerprint) — see :meth:`load_checkpoint`."""
+        return {
+            "kind": "flaas-service",
+            "version": _CHECKPOINT_VERSION,
+            "layout_shards": self._ring_layout_shards(),
+            "geometry": (self.cfg.analyst_slots, self.cfg.pipeline_slots,
+                         self.cfg.block_slots),
+            "ledger_budget": self._ledger_budget.copy(),
+            "ledger_birth": self._ledger_birth.copy(),
+            "wall": self._wall,
+            "table": self.table.state_dict(),
+            "queue": self.queue.state_dict(),
+            "telemetry": self.telemetry.state_dict(),
+            "trace": self.trace.state_dict(),
+        }
+
+    def save_checkpoint(self, manager, metadata: Optional[Dict] = None) -> int:
+        """Checkpoint the full service at the current chunk boundary via a
+        :class:`~repro.checkpoint.manager.CheckpointManager`; returns the
+        step (= tick) saved under."""
+        step = int(self.state.tick)
+        meta = {"scheduler": self.cfg.scheduler,
+                "layout_shards": self._ring_layout_shards(),
+                **(metadata or {})}
+        manager.save(step, self.state, metadata=meta,
+                     host_state=self.checkpoint_host_state())
+        return step
+
+    def load_checkpoint(self, manager, step: Optional[int] = None) -> int:
+        """Restore device + host state from ``manager`` into this (freshly
+        constructed, same-config) service and return the restored tick.
+
+        Elastic hand-off: a checkpoint written under an ``S``-striped ring
+        layout restores onto an ``S'``-striped one by permuting every
+        block-axis array with :func:`repro.shard.state.remap_ring` — both
+        layouts place block ``bid`` as a function of ``bid % B`` only, so
+        the permutation is exact and scheduling continues unchanged."""
+        device, host, step = manager.restore(self.state, step=step,
+                                             with_host=True)
+        if step is None:
+            raise ValueError(f"no checkpoint found in {manager.dir}")
+        if not isinstance(host, dict) or host.get("kind") != "flaas-service":
+            raise ValueError(
+                "checkpoint carries no service host state (was it saved "
+                "with FlaasService.save_checkpoint?)")
+        if host.get("version") != _CHECKPOINT_VERSION:
+            raise ValueError(
+                f"service checkpoint version {host.get('version')} not "
+                f"supported (expected {_CHECKPOINT_VERSION})")
+        geometry = (self.cfg.analyst_slots, self.cfg.pipeline_slots,
+                    self.cfg.block_slots)
+        if tuple(host["geometry"]) != geometry:
+            raise ValueError(
+                f"checkpoint geometry {tuple(host['geometry'])} != "
+                f"configured {geometry}")
+        ledger_budget = np.asarray(host["ledger_budget"], np.float32)
+        ledger_birth = np.asarray(host["ledger_birth"], np.int32)
+        src, dst = int(host["layout_shards"]), self._ring_layout_shards()
+        if src != dst:
+            # lazy import: repro.shard imports this module
+            from repro.shard.state import remap_ring
+            idx = remap_ring(src, dst, self.cfg.block_slots)
+            device = dataclasses.replace(
+                device,
+                demand=np.asarray(device.demand)[:, :, idx],
+                block_budget=np.asarray(device.block_budget)[idx],
+                block_capacity=np.asarray(device.block_capacity)[idx],
+                block_birth=np.asarray(device.block_birth)[idx])
+            ledger_budget = ledger_budget[idx]
+            ledger_birth = ledger_birth[idx]
+        self.state = jax.tree.map(jnp.asarray, device)
+        self._ledger_budget = ledger_budget.copy()
+        self._ledger_birth = ledger_birth.copy()
+        self._wall = float(host["wall"])
+        self.table.load_state_dict(host["table"])
+        self.queue.load_state_dict(host["queue"])
+        self.telemetry.load_state_dict(host["telemetry"])
+        self.trace.load_state_dict(host["trace"])
+        return step
 
     # -------------------------------------------------------------- helpers
     def _placement_arrays(self, placements, boundary_tick: int):

@@ -298,6 +298,9 @@ class SlotTable:
         Prefers the analyst's existing row (returning analysts keep their
         SP1 identity — one row per live analyst); otherwise pops a fresh
         row off the free list."""
+        if n_pipes > self.N:
+            return None                     # can never fit any row — the
+                                            # queue rejects these at offer()
         owned = np.where(self.row_owner == analyst)[0]
         if owned.size:
             row = int(owned[0])
@@ -318,6 +321,28 @@ class SlotTable:
             self.row_owner[row] = analyst
         self.occupied[row, cols] = True
         self.submit_tick[row, cols] = submit_tick
+
+    # -------------------------------------------------------- durability
+    def state_dict(self) -> dict:
+        """Snapshot for :meth:`FlaasService.save_checkpoint` — restoring
+        it into a fresh table reproduces occupancy, analyst identities,
+        submit ticks AND the free-list order (row hand-out is LIFO, so the
+        order matters for bitwise resume)."""
+        return {"occupied": self.occupied.copy(),
+                "row_owner": self.row_owner.copy(),
+                "submit_tick": self.submit_tick.copy(),
+                "free_rows": list(self._free_rows)}
+
+    def load_state_dict(self, d: dict) -> None:
+        occupied = np.asarray(d["occupied"], bool)
+        if occupied.shape != (self.M, self.N):
+            raise ValueError(
+                f"slot-table checkpoint is {occupied.shape}, table is "
+                f"({self.M}, {self.N})")
+        self.occupied = occupied.copy()
+        self.row_owner = np.asarray(d["row_owner"], np.int64).copy()
+        self.submit_tick = np.asarray(d["submit_tick"], np.int64).copy()
+        self._free_rows = [int(r) for r in d["free_rows"]]
 
     def release_done(self, done: np.ndarray) -> np.ndarray:
         """Recycle slots whose pipelines were granted (``done[M, N]`` from

@@ -39,6 +39,23 @@ class _Reservoir:
         data = self.buf[: min(self.n_seen, self.capacity)]
         return {f"p{q}": float(np.percentile(data, q)) for q in qs}
 
+    def state_dict(self) -> dict:
+        """Buffer + RNG bit-generator state: a restored reservoir makes
+        the same replacement draws as the uninterrupted one, so resumed
+        percentiles are bitwise-identical."""
+        return {"capacity": self.capacity, "buf": self.buf.copy(),
+                "n_seen": self.n_seen,
+                "rng": self.rng.bit_generator.state}
+
+    def load_state_dict(self, d: dict) -> None:
+        if int(d["capacity"]) != self.capacity:
+            raise ValueError(
+                f"reservoir checkpoint capacity {d['capacity']} != "
+                f"configured {self.capacity}")
+        self.buf = np.asarray(d["buf"], np.float64).copy()
+        self.n_seen = int(d["n_seen"])
+        self.rng.bit_generator.state = d["rng"]
+
 
 class StreamingTelemetry:
     """Cumulative service metrics; everything here is host-side numpy."""
@@ -110,6 +127,25 @@ class StreamingTelemetry:
         self.grants += int(latency_ticks.size)
         self._latency.add(latency_ticks)
 
+    # ---------------------------------------------------------- durability
+    def state_dict(self) -> dict:
+        """Every cumulative aggregate plus the latency reservoir (buffer
+        and RNG state) — restoring this into a fresh instance continues
+        the stream bitwise (see :meth:`FlaasService.save_checkpoint`)."""
+        d = {k: v for k, v in self.__dict__.items() if k != "_latency"}
+        d["mode_ticks"] = dict(self.mode_ticks)
+        d["latency"] = self._latency.state_dict()
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        d = dict(d)
+        self._latency.load_state_dict(d.pop("latency"))
+        self.mode_ticks = dict(d.pop("mode_ticks"))
+        for k, v in d.items():
+            if k not in self.__dict__:
+                raise ValueError(f"unknown telemetry checkpoint field {k!r}")
+            setattr(self, k, v)
+
     # ------------------------------------------------------------- summary
     def summary(self, admission: Dict | None = None,
                 wall_seconds: float | None = None) -> Dict:
@@ -140,6 +176,11 @@ class StreamingTelemetry:
             offered = max(admission.get("offered", 0), 1)
             out["admission_rate"] = admission.get("admitted", 0) / offered
             out["rejection_rate"] = admission.get("rejected", 0) / offered
+            # head-of-line deferral events per offered submission: makes a
+            # stalled-but-nonempty queue visible (a submission deferred at
+            # several boundaries counts each time, so the rate can top 1.0
+            # under sustained head-of-line blocking).
+            out["deferral_rate"] = admission.get("deferred", 0) / offered
         if wall_seconds is not None and wall_seconds > 0:
             out["wall_seconds"] = wall_seconds
             out["ticks_per_second"] = self.ticks / wall_seconds
@@ -147,3 +188,18 @@ class StreamingTelemetry:
                 out["admissions_per_second"] = \
                     admission.get("admitted", 0) / wall_seconds
         return out
+
+
+# summary keys derived from wall-clock time — the only parts of a summary
+# that legitimately differ between an uninterrupted run and a
+# checkpoint/restore replay of the same ticks.
+WALL_KEYS = ("wall_seconds", "ticks_per_second", "admissions_per_second")
+
+
+def summary_fingerprint(summary: Dict) -> Dict:
+    """``summary`` with every wall-clock-derived key stripped (recursively)
+    — two runs that performed identical scheduling work have *equal*
+    fingerprints, which is how the crash-recovery tests and the
+    ``--smoke`` parity row assert bitwise resume."""
+    return {k: summary_fingerprint(v) if isinstance(v, dict) else v
+            for k, v in summary.items() if k not in WALL_KEYS}

@@ -109,6 +109,31 @@ class ArrivalTrace:
         events = [src.step(t) for t in range(n_ticks)]
         return PrecomputedTrace(src, events)
 
+    # ---------------------------------------------------------- durability
+    def state_dict(self) -> dict:
+        """The trace cursor: RNG bit-generator state plus the consecutive-
+        tick bookkeeping.  Restoring it into a *fresh* trace built from
+        the same (scenario, pattern, seed, knobs) resumes the stream at
+        the checkpointed tick with bitwise-identical draws — the property
+        that makes service crash recovery exact at chunk boundaries."""
+        return {"kind": "arrival", "pattern": self.pattern, "seed": self.seed,
+                "rng": self.rng.bit_generator.state,
+                "next_tick": self._next_tick,
+                "next_analyst": self._next_analyst,
+                "bursting": self._bursting}
+
+    def load_state_dict(self, d: dict) -> None:
+        if d.get("kind") != "arrival" or d.get("pattern") != self.pattern \
+                or d.get("seed") != self.seed:
+            raise ValueError(
+                f"trace checkpoint ({d.get('kind')}/{d.get('pattern')}/"
+                f"seed {d.get('seed')}) does not match this trace "
+                f"(arrival/{self.pattern}/seed {self.seed})")
+        self.rng.bit_generator.state = d["rng"]
+        self._next_tick = int(d["next_tick"])
+        self._next_analyst = int(d["next_analyst"])
+        self._bursting = bool(d["bursting"])
+
     # ------------------------------------------------------------- pattern
     def _rate(self, tick: int) -> float:
         base = self.sim.arrival_rate
@@ -194,6 +219,21 @@ class PrecomputedTrace:
         fresh.__dict__.update(self.__dict__)
         fresh._next_tick = 0
         return fresh
+
+    def state_dict(self) -> dict:
+        """Cursor only — the recorded events are the caller's to rebuild
+        (restore into a fresh ``.reset()`` copy of the same window)."""
+        return {"kind": "precomputed", "pattern": self.pattern,
+                "seed": self.seed, "next_tick": self._next_tick}
+
+    def load_state_dict(self, d: dict) -> None:
+        if d.get("kind") != "precomputed" or d.get("pattern") != self.pattern \
+                or d.get("seed") != self.seed:
+            raise ValueError(
+                f"trace checkpoint ({d.get('kind')}/{d.get('pattern')}/"
+                f"seed {d.get('seed')}) does not match this trace "
+                f"(precomputed/{self.pattern}/seed {self.seed})")
+        self._next_tick = int(d["next_tick"])
 
     def step(self, tick: int) -> List[Submission]:
         if tick != self._next_tick:

@@ -19,11 +19,12 @@ and ``tests/test_shard_service.py``).  CPU-only hosts emulate a mesh via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from .service import ShardedFlaasService, gather_shard_view
-from .state import (AXIS, ShardedServiceState, mesh_shards, ring_slots,
-                    shard_mesh, shard_state, state_shardings, state_specs)
+from .state import (AXIS, ShardedServiceState, mesh_shards, remap_ring,
+                    ring_slots, shard_mesh, shard_state, state_shardings,
+                    state_specs)
 
 __all__ = [
     "AXIS", "ShardedFlaasService", "ShardedServiceState",
-    "gather_shard_view", "mesh_shards", "ring_slots", "shard_mesh",
-    "shard_state", "state_shardings", "state_specs",
+    "gather_shard_view", "mesh_shards", "remap_ring", "ring_slots",
+    "shard_mesh", "shard_state", "state_shardings", "state_specs",
 ]

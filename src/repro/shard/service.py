@@ -194,6 +194,12 @@ class ShardedFlaasService(FlaasService):
         # gather, wipes and boundary sweep are entirely shard-local.
         return mesh_shards(self.mesh)
 
+    def _ring_layout_shards(self) -> int:
+        # checkpoints record the stripe count; load_checkpoint remaps the
+        # block axis when restoring onto a different shard count (the
+        # `state` setter then re-commits the permuted state to this mesh).
+        return mesh_shards(self.mesh)
+
     # -------------------------------------------------------------- chunk
     def _compiled_step(self, n_ticks: int, mode: str):
         step = _sharded_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,

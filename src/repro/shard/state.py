@@ -65,6 +65,33 @@ def ring_slots(bids, n_shards: int, block_slots: int):
     return (bids % n_shards) * per_shard + (bids // n_shards) % per_shard
 
 
+def remap_ring(n_from: int, n_to: int, block_slots: int) -> np.ndarray:
+    """Gather index remapping every block-axis array from the
+    ``n_from``-striped ring layout to the ``n_to``-striped one:
+    ``new = old[idx]`` puts each block's slot where
+    :func:`ring_slots`(bid, n_to) expects it.
+
+    This is what makes shard join/leave a checkpoint-remap-restore: both
+    layouts are functions of ``bid % B`` only (the ``bid + B`` reuse
+    horizon), so a slot's occupant under the old stripe count has exactly
+    one home under the new one.  The old slot ``g`` holds the bid class
+    ``n_from * (g % (B/S)) + g // (B/S)`` — the inverse of
+    :func:`ring_slots` — and that class's new slot is ``ring_slots`` under
+    ``n_to``.  ``n_from == n_to`` returns the identity permutation."""
+    B = int(block_slots)
+    for n in (n_from, n_to):
+        if n < 1 or B % n:
+            raise ValueError(
+                f"block_slots={B} not divisible by {n} shards")
+    g = np.arange(B, dtype=np.int64)
+    per = B // n_from
+    bid_class = n_from * (g % per) + g // per
+    dst = ring_slots(bid_class, n_to, B)
+    idx = np.empty(B, np.int64)
+    idx[dst] = g
+    return idx
+
+
 def state_specs() -> ServiceState:
     """ServiceState-shaped pytree of PartitionSpecs: ledger arrays sharded
     on the block axis, pipeline tables replicated."""

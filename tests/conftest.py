@@ -13,6 +13,11 @@ try:
 except ImportError:
     settings = None
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (deselect with -m 'not slow')")
+
 if settings is not None:
     settings.register_profile(
         "ci", max_examples=20, deadline=None, derandomize=True,

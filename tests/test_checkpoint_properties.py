@@ -1,0 +1,115 @@
+"""Hypothesis property tests for host-state serialization.
+
+Optional-dep-safe (same pattern as ``test_paging_properties.py``): the
+module skips itself when ``hypothesis`` is missing.  Two round-trip
+families behind ``FlaasService.save_checkpoint``:
+
+* :class:`~repro.service.state.SlotTable` — under random admit/release
+  churn, ``state_dict -> pickle -> load_state_dict`` into a fresh table is
+  exact (occupancy, identities, submit ticks, free-list order), and the
+  restored table makes the *same placement decisions* as the original on
+  any subsequent admission stream;
+* :class:`~repro.service.telemetry._Reservoir` — checkpointing mid-stream
+  and continuing is bitwise-equivalent to the uninterrupted stream (buffer
+  contents, replacement draws, percentiles).
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests require hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.service import SlotTable
+from repro.service.telemetry import _Reservoir
+
+
+def _churn(table, data, steps, tag):
+    """Random admit/release ops against ``table`` (drawn from ``data``)."""
+    M, N = table.M, table.N
+    for step in range(steps):
+        if data.draw(st.booleans(), label=f"{tag}:admit@{step}"):
+            analyst = data.draw(st.integers(0, 6), label=f"{tag}:a@{step}")
+            n_pipes = data.draw(st.integers(1, N), label=f"{tag}:n@{step}")
+            placed = table.row_for(analyst, n_pipes)
+            if placed is not None:
+                table.commit(analyst, placed[0], placed[1], submit_tick=step)
+        else:
+            done = np.zeros((M, N), bool)
+            flat = data.draw(st.lists(st.integers(0, M * N - 1),
+                                      max_size=M * N),
+                             label=f"{tag}:done@{step}")
+            done.reshape(-1)[list(set(flat))] = True
+            table.release_done(done)
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_slot_table_roundtrip_is_exact_under_churn(data):
+    M = data.draw(st.integers(1, 4), label="rows")
+    N = data.draw(st.integers(1, 5), label="cols")
+    table = SlotTable(M, N)
+    _churn(table, data, data.draw(st.integers(1, 25), label="steps"), "pre")
+
+    fresh = SlotTable(M, N)
+    fresh.load_state_dict(pickle.loads(pickle.dumps(table.state_dict())))
+    np.testing.assert_array_equal(fresh.occupied, table.occupied)
+    np.testing.assert_array_equal(fresh.row_owner, table.row_owner)
+    np.testing.assert_array_equal(fresh.submit_tick, table.submit_tick)
+    assert fresh._free_rows == table._free_rows
+
+    # the restored table is *behaviorally* identical: same placement
+    # decisions (incl. free-list LIFO order) on any subsequent stream
+    for i in range(data.draw(st.integers(1, 10), label="post")):
+        analyst = data.draw(st.integers(0, 6), label=f"post:a@{i}")
+        n_pipes = data.draw(st.integers(1, N), label=f"post:n@{i}")
+        pa, pb = table.row_for(analyst, n_pipes), fresh.row_for(analyst,
+                                                               n_pipes)
+        assert pa == pb
+        if pa is not None:
+            table.commit(analyst, pa[0], pa[1], submit_tick=100 + i)
+            fresh.commit(analyst, pb[0], pb[1], submit_tick=100 + i)
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_reservoir_resume_is_bitwise(data):
+    """Feed a stream, checkpoint midway, restore into a fresh reservoir,
+    feed the rest: buffer and percentiles match the uninterrupted run
+    bit-for-bit (the RNG replacement draws are part of the state)."""
+    capacity = data.draw(st.integers(1, 8), label="capacity")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    values = data.draw(
+        st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                 min_size=1, max_size=60),
+        label="stream")
+    cut = data.draw(st.integers(0, len(values)), label="cut")
+
+    ref = _Reservoir(capacity, seed)
+    ref.add(np.asarray(values))
+
+    first = _Reservoir(capacity, seed)
+    first.add(np.asarray(values[:cut]))
+    blob = pickle.dumps(first.state_dict())
+    resumed = _Reservoir(capacity, seed=seed + 1)   # seed is NOT the state
+    resumed.load_state_dict(pickle.loads(blob))
+    resumed.add(np.asarray(values[cut:]))
+
+    assert resumed.n_seen == ref.n_seen
+    np.testing.assert_array_equal(resumed.buf, ref.buf)
+    a = ref.percentiles((50, 90, 99))
+    b = resumed.percentiles((50, 90, 99))
+    for k in a:
+        assert (np.isnan(a[k]) and np.isnan(b[k])) or a[k] == b[k]
+
+
+@given(st.integers(1, 8), st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_reservoir_rejects_capacity_mismatch(capacity, seed):
+    r = _Reservoir(capacity, seed)
+    r.add(np.arange(3.0))
+    other = _Reservoir(capacity + 1, seed)
+    with pytest.raises(ValueError, match="capacity"):
+        other.load_state_dict(r.state_dict())

@@ -74,6 +74,95 @@ class TestCheckpoint:
         got, at = mgr.restore({"x": np.zeros(4, np.float32)})
         assert at == 7 and np.allclose(got["x"], np.arange(4.0))
 
+    def test_async_save_failure_reaches_wait(self, tmp_path, monkeypatch):
+        """Regression: a failed async save used to die silently with its
+        thread — the caller believed the checkpoint existed.  The failure
+        must surface from wait()."""
+        import repro.checkpoint.manager as mod
+
+        def boom(*a, **k):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(mod.np, "savez", boom)
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, {"x": jnp.ones(2)})
+        with pytest.raises(OSError, match="disk full"):
+            mgr.wait()
+        # the error is consumed: wait() is idempotent afterwards
+        mgr.wait()
+        assert mgr.all_steps() == []    # failed step never renamed in
+
+    def test_async_save_failure_reaches_next_save(self, tmp_path,
+                                                  monkeypatch):
+        """A caller that never wait()s still hears about the failure at
+        the next save(), before new work is enqueued."""
+        import repro.checkpoint.manager as mod
+
+        real = mod.np.savez
+        calls = {"n": 0}
+
+        def flaky(*a, **k):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise OSError("transient")
+            return real(*a, **k)
+
+        monkeypatch.setattr(mod.np, "savez", flaky)
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, {"x": jnp.ones(2)})
+        with pytest.raises(OSError, match="transient"):
+            mgr.save(2, {"x": jnp.ones(2)})
+        # and a retried save then succeeds cleanly
+        mgr.save(3, {"x": jnp.ones(2)})
+        mgr.wait()
+        assert mgr.all_steps() == [3]
+
+    def test_checkpoint_dir_honors_umask(self, tmp_path):
+        """Regression: step dirs inherited mkdtemp's 0700 mode, so a
+        hand-off to another user/process could not read the checkpoint."""
+        old = os.umask(0o022)
+        try:
+            mgr = CheckpointManager(str(tmp_path))
+            mgr.save(1, {"x": jnp.ones(2)})
+        finally:
+            os.umask(old)
+        mode = os.stat(tmp_path / "step_0000000001").st_mode & 0o777
+        assert mode == 0o755, oct(mode)
+
+    def test_host_payload_roundtrip(self, tmp_path):
+        """host_state rides in the same atomic step dir as the arrays and
+        comes back via restore(with_host=True)."""
+        from collections import deque
+        mgr = CheckpointManager(str(tmp_path))
+        host = {"free": [3, 1, 2], "fifo": deque(["a", "b"]),
+                "rng": np.random.default_rng(5).bit_generator.state}
+        mgr.save(4, {"x": jnp.arange(3.0)}, host_state=host)
+        got, back, at = mgr.restore({"x": np.zeros(3, np.float32)},
+                                    with_host=True)
+        assert at == 4 and np.allclose(got["x"], np.arange(3.0))
+        assert back["free"] == [3, 1, 2]
+        assert list(back["fifo"]) == ["a", "b"]
+        assert back["rng"] == host["rng"]
+
+    def test_host_payload_snapshots_eagerly(self, tmp_path):
+        """An async save must capture mutable host state at save() time —
+        the caller mutates the live objects immediately after."""
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        host = {"pending": [1, 2, 3]}
+        mgr.save(1, {"x": jnp.ones(2)}, host_state=host)
+        host["pending"].append(99)      # post-save mutation must not leak
+        mgr.wait()
+        _, back, _ = mgr.restore({"x": np.zeros(2, np.float32)},
+                                 with_host=True)
+        assert back["pending"] == [1, 2, 3]
+
+    def test_restore_without_host_payload(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(2, {"x": jnp.ones(2)})
+        _, host, at = mgr.restore({"x": np.zeros(2, np.float32)},
+                                  with_host=True)
+        assert at == 2 and host is None
+
 
 class TestStragglersAndElasticity:
     def _client_data(self, r, devices):
