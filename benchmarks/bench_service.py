@@ -15,6 +15,10 @@ Four question groups:
   keeps demand out of the scan carry (see ``docs/service.md``); the row
   pins the wrapped-tick/engine-round ratio for the paged body next to the
   full-tensor-carry fallback, with parity asserted between the two;
+* **tenancy mix** (``tenancy_mix``): the tiered service — per-class
+  queueing, deadline/cost-cap checks, per-tier telemetry — vs the
+  single-tier baseline on the same arrival process, with the per-tier
+  SLO attainment the ``free_pro_enterprise`` mix achieved;
 * **shard throughput** (:func:`shard_throughput`): the sharded service
   plane's shard-count sweep at paper size and at 8x the paper's block
   count (ledger striped over a device mesh; see ``docs/sharding.md``).
@@ -245,6 +249,42 @@ def _steady_state_paged() -> list:
     return rows
 
 
+def _tenancy_mix() -> list:
+    """Tiered service throughput: the ``free_pro_enterprise`` mix vs the
+    single-tier baseline on the same arrival process.  The tiered run pays
+    for per-class queueing, deadline/cost-cap checks at drain, and per-tier
+    telemetry — all host-side boundary work — so the row pins that
+    overhead next to the baseline tick rate and reports the per-tier SLO
+    attainment the mix achieved."""
+    rows = []
+    for label, tiers in (("single", "single"),
+                         ("free_pro_enterprise", "free_pro_enterprise")):
+        def make():
+            trace = make_trace("paper_default", "poisson", seed=0,
+                               tiers=tiers,
+                               **SWEEP_SIZE).precompute(SWEEP_TICKS)
+            return FlaasService(ServiceConfig(
+                scheduler="dpbalance", sched=SchedulerConfig(beta=2.2),
+                analyst_slots=4, pipeline_slots=6,
+                block_slots=10 * trace.blocks_per_tick, chunk_ticks=4,
+                admit_batch=16, max_pending=64, validate=False), trace)
+
+        wall, summary = _timed_run(make, SWEEP_TICKS)
+        extra = {}
+        for tier, stats in summary.get("tenancy", {}).get(
+                "tiers", {}).items():
+            extra[f"admitted_{tier}"] = stats["admitted"]
+            fg = stats.get("first_grant_ticks", {})
+            if fg.get("count") and "slo_attainment" in fg:
+                extra[f"slo_{tier}"] = round(fg["slo_attainment"], 3)
+        rows.append((f"service_throughput/tenancy_mix/{label}",
+                     wall * 1e6 / SWEEP_TICKS, derived(
+                         ticks_per_s=round(SWEEP_TICKS / wall, 1),
+                         admitted=summary["admission"]["admitted"],
+                         **extra)))
+    return rows
+
+
 def shard_throughput() -> list:
     """Shard-count sweep of :class:`ShardedFlaasService` — paper geometry
     (B = 2000 ring) and an 8x-block-count geometry (B = 16000: beyond one
@@ -296,4 +336,4 @@ def shard_throughput() -> list:
 
 def run() -> list:
     return (_chunk_sweep() + _queue_pressure() + _vs_engine_paper_size() +
-            _steady_state_paged() + shard_throughput())
+            _steady_state_paged() + _tenancy_mix() + shard_throughput())

@@ -173,6 +173,53 @@ def smoke() -> tuple:
               file=sys.stderr)
         failures += 1
 
+    # tenancy_default_parity smoke: the default single-tier configuration
+    # must be bitwise identical to the pre-tenancy service — per-tick
+    # metrics AND final device state — for all four schedulers, through a
+    # ring wrap.  ASSERTED, not just reported.
+    try:
+        import dataclasses as _dc
+
+        import numpy as np
+
+        from repro.service import collect_service_metrics
+
+        trace = make_trace("paper_default", "poisson", seed=0, n_devices=4,
+                           pipelines_per_analyst=6).precompute(16)
+        tiered = make_trace("paper_default", "poisson", seed=0, n_devices=4,
+                            pipelines_per_analyst=6,
+                            tiers="single").precompute(16)
+        t0 = time.perf_counter()
+        for name in SCHEDULER_NAMES:
+            def tier_svc(tr):
+                return FlaasService(ServiceConfig(
+                    scheduler=name, sched=cfg, analyst_slots=4,
+                    pipeline_slots=6,
+                    block_slots=10 * trace.blocks_per_tick, chunk_ticks=4,
+                    admit_batch=8, max_pending=32), tr.reset())
+            sa, sb = tier_svc(trace), tier_svc(tiered)
+            ya = collect_service_metrics(sa, 16)
+            yb = collect_service_metrics(sb, 16)
+            for k in ya:
+                if not np.array_equal(np.asarray(ya[k]), np.asarray(yb[k])):
+                    raise AssertionError(
+                        f"single-tier parity violated on {name}/{k!r}")
+            for f in _dc.fields(sa.state):
+                if not np.array_equal(np.asarray(getattr(sa.state, f.name)),
+                                      np.asarray(getattr(sb.state, f.name))):
+                    raise AssertionError(
+                        f"single-tier state parity violated on "
+                        f"{name}/{f.name!r}")
+        us_parity = (time.perf_counter() - t0) * 1e6 / (16 * len(
+            SCHEDULER_NAMES))
+        rows.append(("smoke/tenancy_default_parity", us_parity, derived(
+            schedulers=len(SCHEDULER_NAMES), parity=1)))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/tenancy_default_parity,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
     # shard_throughput smoke: the sharded service over however many
     # devices the runner has (1 on a plain CPU; the sharded CI job runs
     # with an 8-device emulated mesh), ring wrap included.

@@ -1,0 +1,83 @@
+"""Tiered service demo: a free/pro/enterprise tenant mix under load.
+
+The streaming demo (`streaming_service.py`) runs peer analysts; this one
+runs the same service as a multi-tenant platform — strict-priority
+admission classes with aging, tier weights in the DPBalance utility,
+deadline shedding, cost caps, and per-tier SLO telemetry.  See
+docs/tenancy.md.
+
+    PYTHONPATH=src python examples/tiered_service.py
+    PYTHONPATH=src python examples/tiered_service.py --scheduler dpf --ticks 192
+    PYTHONPATH=src python examples/tiered_service.py --mix single
+
+With ``--telemetry out.jsonl`` the full summary is appended as one JSON
+line per chunk boundary (NaN-safe) — tail it from another terminal.
+"""
+import argparse
+
+from repro.core import SCHEDULER_NAMES, SchedulerConfig
+from repro.service import (FlaasService, ServiceConfig, TENANT_MIXES,
+                           make_trace)
+
+SIZE = dict(n_devices=8, pipelines_per_analyst=8)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mix", default="free_pro_enterprise",
+                   choices=sorted(TENANT_MIXES))
+    p.add_argument("--scheduler", default="dpbalance",
+                   choices=SCHEDULER_NAMES)
+    p.add_argument("--pattern", default="churn",
+                   choices=("poisson", "diurnal", "bursty", "churn"))
+    p.add_argument("--ticks", type=int, default=96)
+    p.add_argument("--chunk", type=int, default=8)
+    p.add_argument("--beta", type=float, default=2.2)
+    p.add_argument("--telemetry", default=None, metavar="PATH",
+                   help="append summary JSON lines here per chunk")
+    args = p.parse_args()
+
+    trace = make_trace("paper_default", args.pattern, seed=0,
+                       tiers=args.mix, **SIZE)
+    service = FlaasService(ServiceConfig(
+        scheduler=args.scheduler, sched=SchedulerConfig(beta=args.beta),
+        analyst_slots=6, pipeline_slots=8,
+        block_slots=10 * trace.blocks_per_tick, chunk_ticks=args.chunk,
+        admit_batch=8, max_pending=48,
+        telemetry_path=args.telemetry), trace)
+    s = service.run(args.ticks)
+
+    adm = s["admission"]
+    print(f"{args.mix} / {args.scheduler} / {args.pattern}: "
+          f"{args.ticks} ticks, chunk={args.chunk}")
+    print(f"admitted={adm['admitted']}  deferred={adm['deferred']}  "
+          f"shed_deadline={adm['rejected_deadline']}  "
+          f"capped={adm['rejected_cost_cap']}  "
+          f"backpressure={adm['rejected'] - adm['rejected_oversize'] - adm['rejected_deadline'] - adm['rejected_cost_cap']}")
+
+    tiers = s.get("tenancy", {}).get("tiers", {})
+    print(f"\n{'tier':<12} {'admitted':>8} {'spend(eps)':>11} "
+          f"{'adm p50/p99':>12} {'grant p50/p99':>14} {'SLO adm':>8} "
+          f"{'SLO grant':>10}")
+    for name in sorted(tiers, key=lambda n: -tiers[n]["admitted"]):
+        t = tiers[name]
+        al, fg = t["admission_latency_ticks"], t.get("first_grant_ticks", {})
+
+        def pct(h, k):
+            return f"{h[k]:.0f}" if h.get("count") else "-"
+
+        def slo(h):
+            return (f"{100 * h['slo_attainment']:.0f}%"
+                    if h.get("count") and "slo_attainment" in h else "-")
+
+        print(f"{name:<12} {t['admitted']:>8} {t['spend']:>11.2f} "
+              f"{pct(al, 'p50') + '/' + pct(al, 'p99'):>12} "
+              f"{pct(fg, 'p50') + '/' + pct(fg, 'p99'):>14} "
+              f"{slo(al):>8} {slo(fg):>10}")
+
+    if args.telemetry:
+        print(f"\ntelemetry JSON lines appended to {args.telemetry}")
+
+
+if __name__ == "__main__":
+    main()

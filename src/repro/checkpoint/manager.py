@@ -53,10 +53,20 @@ def _key_str(k) -> str:
 
 
 def _unflatten(template, flat: dict):
+    """Rebuild the template pytree from a flat path->array dict.
+
+    A template leaf with no stored array keeps its template value — this is
+    what lets a checkpoint written before a state field existed restore into
+    the grown structure (e.g. a v1 service checkpoint, which predates
+    ``ServiceState.weight``, fills the new leaf from the freshly constructed
+    default).  Stored arrays whose path no longer exists are ignored."""
     paths_leaves = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in paths_leaves[0]:
         key = _SEP.join(_key_str(k) for k in path)
+        if key not in flat:
+            leaves.append(leaf)
+            continue
         arr = flat[key]
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)

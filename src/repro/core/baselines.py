@@ -13,6 +13,7 @@ RoundResult schema as DPBalance so every metric is directly comparable.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -61,9 +62,12 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn,
     consumed = jnp.sum(grants, axis=(0, 1))
     leftover = jnp.maximum(rnd.capacity - consumed, 0.0)
 
+    # dataclasses.replace keeps the optional per-analyst tier weight, so
+    # the baselines' Eq 8-10 metrics are weighted exactly like DPBalance's
+    # (their grant *order* stays unweighted — they are the paper's
+    # tier-blind baselines).
     view = dm.AnalystView.build(
-        dm.RoundInputs(rnd.demand, active, rnd.arrival, rnd.loss,
-                       rnd.capacity, rnd.budget_total, rnd.now), cfg.tau,
+        dataclasses.replace(rnd, active=active), cfg.tau,
         cfg.use_pallas, block_axis)
     realized = jnp.sum(gamma * x_ij[..., None], axis=1)
     mu_real = block_axis.max(jnp.max(realized, axis=-1))

@@ -86,7 +86,16 @@ jax.tree_util.register_dataclass(
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class RoundInputs:
-    """Everything the scheduler sees for one allocation round."""
+    """Everything the scheduler sees for one allocation round.
+
+    ``weight`` is the optional per-analyst tier weight (service tenancy —
+    :mod:`repro.service.tenancy`): it multiplies the utility coefficient
+    ``a_i = T(t_i) l_i``, so SP1's alpha-fair water-filling and every
+    Eq 8-10 metric see ``a_i * w_i``.  ``None`` (the engine path, and any
+    pre-tenancy caller) is pytree-structural: the compiled round is
+    op-for-op the unweighted program.  An all-ones weight compiles the
+    multiply but is bitwise-identical to it (``x * 1.0 == x``), which is
+    what keeps the default single-tier service exact."""
 
     demand: Array        # [M, N, K] raw epsilon demand
     active: Array        # [M, N] bool — pipeline exists and is pending
@@ -95,6 +104,7 @@ class RoundInputs:
     capacity: Array      # [K] remaining budget of each block (epsilon)
     budget_total: Array  # [K] the block's *total* budget (normalization base)
     now: Array           # scalar — current time (seconds)
+    weight: Optional[Array] = None  # [M] per-analyst tier weight (or None)
 
     @property
     def shape(self):
@@ -183,5 +193,7 @@ class AnalystView:
         T_i = jnp.exp(-t_i / tau)
         l_i = analyst_loss(rnd.loss, mu_ij, rnd.active)
         a_i = T_i * l_i
+        if rnd.weight is not None:      # tier weight folds into a_i, so it
+            a_i = a_i * rnd.weight      # reaches SP1 and the Eq 8-10 metrics
         mask = jnp.sum(rnd.active, axis=1) > 0
         return cls(gamma_i=g_i, mu_i=mu_i, a_i=a_i, mask=mask)

@@ -71,7 +71,13 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
     """One DPBalance round.  With a sharded ``block_axis`` (see
     :mod:`repro.shard`) the demand/capacity operands are the caller's local
     block stripes and every per-block sweep stays shard-local; only the
-    analyst-level aggregates cross the mesh."""
+    analyst-level aggregates cross the mesh.
+
+    ``rnd.weight`` (optional [M] per-analyst tier weight, service tenancy)
+    folds into ``a_i`` inside :meth:`AnalystView.build`, so SP1's
+    water-filling and the Eq 8-10 metrics are tier-weighted.  SP2's
+    per-pipeline ``a_ij`` stays unweighted on purpose: within one analyst
+    a tier weight is a common factor, so it cannot change the packing."""
     gamma = dm.normalized_demand(rnd.demand, rnd.budget_total)
     mu_ij = dm.pipeline_max_share(gamma, block_axis)
 

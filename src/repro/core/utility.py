@@ -103,6 +103,34 @@ def jain_index(util, mask=None):
     return num / den
 
 
+def group_fairness(util, beta: float, group_id, n_groups: int, mask=None):
+    """Eq-9 dominant fairness restricted to each analyst group — the
+    within-tier fairness metric of the multi-tenant service tier
+    (``group_id[i]`` is analyst i's tier index in ``[0, n_groups)``).
+
+    Returns an ``[n_groups]`` vector: entry g is
+    :func:`dominant_fairness` computed over only the analysts of group g
+    (others masked out).  DPBalance's fairness theorems are peer-analyst
+    results; with tier weights, peers are *within-tier* — this is the
+    quantity the per-tier axiom regressions assert on."""
+    if mask is None:
+        mask = jnp.ones_like(util, dtype=bool)
+    gids = jnp.arange(n_groups)
+    in_group = group_id[None, :] == gids[:, None]          # [G, M]
+    gmask = in_group & mask[None, :]
+    return jnp.stack([dominant_fairness(util, beta, gmask[g])
+                      for g in range(n_groups)])
+
+
+def group_efficiency(util, group_id, n_groups: int, mask=None):
+    """Eq-8 dominant efficiency per analyst group (tier) — ``[n_groups]``."""
+    if mask is None:
+        mask = jnp.ones_like(util, dtype=bool)
+    gids = jnp.arange(n_groups)
+    in_group = group_id[None, :] == gids[:, None]
+    return jnp.sum(util[None, :] * (in_group & mask[None, :]), axis=-1)
+
+
 def default_lambda(beta: float) -> float:
     """lambda = |1-beta|/beta — the setting under which Eq 10 reduces to Eq 12
     and (for beta>1) all four economic properties hold (Thms 1-4)."""

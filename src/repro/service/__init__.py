@@ -15,7 +15,9 @@ from .replay import (PARITY_KEYS, collect_service_metrics, freeze_trace,
 from .server import FlaasService, ServiceConfig
 from .state import (NEVER, MintPlan, PagePlan, ServiceState, SlotTable,
                     admit_batch, plan_mints, plan_pages)
-from .telemetry import StreamingTelemetry, summary_fingerprint
+from .telemetry import StreamingTelemetry, json_safe, summary_fingerprint
+from .tenancy import (FREE_PRO_ENTERPRISE, SINGLE_TIER, TENANT_MIXES,
+                      TenancyPolicy, TierSpec, resolve_policy)
 from .traces import (PATTERNS, ArrivalTrace, PrecomputedTrace, Submission,
                      make_trace)
 
@@ -24,6 +26,8 @@ __all__ = [
     "collect_service_metrics", "freeze_trace", "replay_gap", "FlaasService",
     "ServiceConfig", "NEVER", "MintPlan", "PagePlan", "ServiceState",
     "SlotTable", "admit_batch", "plan_mints", "plan_pages",
-    "StreamingTelemetry", "summary_fingerprint", "PATTERNS", "ArrivalTrace",
-    "PrecomputedTrace", "Submission", "make_trace",
+    "StreamingTelemetry", "json_safe", "summary_fingerprint", "PATTERNS",
+    "ArrivalTrace", "PrecomputedTrace", "Submission", "make_trace",
+    "FREE_PRO_ENTERPRISE", "SINGLE_TIER", "TENANT_MIXES", "TenancyPolicy",
+    "TierSpec", "resolve_policy",
 ]

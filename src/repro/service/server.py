@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import time
 from typing import Dict, Optional
 
@@ -38,11 +39,18 @@ from repro.core.simulation import ROUND_SECONDS
 
 from .queue import AdmissionQueue
 from .state import NEVER, ServiceState, SlotTable, admit_batch, plan_mints
-from .telemetry import StreamingTelemetry
+from .telemetry import StreamingTelemetry, json_safe
+from .tenancy import policy_key, resolve_policy
 from .traces import ArrivalTrace, demand_window_ticks
 
 # Bump when checkpoint_host_state()'s schema changes incompatibly.
-_CHECKPOINT_VERSION = 1
+# Version 2 (tenancy): adds the per-row tier/weight mirrors, the
+# ServiceState.weight device leaf, per-tier telemetry, and the versioned
+# per-class admission queue.  Version-1 (PR 6) checkpoints still restore:
+# every tenancy field defaults to the neutral single tier (see
+# load_checkpoint).
+_CHECKPOINT_VERSION = 2
+_COMPAT_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +68,14 @@ class ServiceConfig:
     paged: bool = True             # two-ring paged demand residency on wrap
                                    # chunks (False = carry the full tensor)
     latency_reservoir: int = 100_000
+    # Tenancy policy: None (adopt the trace's tier mix, if any), a tenant-
+    # mix registry name, or a TenancyPolicy.  Governs queue priorities /
+    # aging, SLO targets, and cost caps; tier *assignment* always comes
+    # stamped on the submissions themselves.
+    tenancy: object = None
+    # JSON-lines telemetry export: append summary() at every chunk
+    # boundary (NaN-safe plain-dict serialization; see telemetry.json_safe)
+    telemetry_path: Optional[str] = None
 
 
 def _chunk_metrics(state: ServiceState, mint_ops, *,
@@ -138,7 +154,10 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             active=pending,
             arrival=jnp.where(pending, state.arrival, 0.0),
             loss=jnp.where(pending, state.loss, 1.0),
-            capacity=capacity, budget_total=budget_total, now=now)
+            capacity=capacity, budget_total=budget_total, now=now,
+            # per-analyst tier weight (scan constant; all-ones in the
+            # default single-tier service, which is bitwise-neutral)
+            weight=state.weight)
         res = round_fn(rnd, cfg, block_axis=block_axis)
         mask = jnp.sum(pending, axis=1) > 0
         out = {
@@ -149,6 +168,11 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             "round_jain": res.jain,
             "n_allocated": res.n_allocated,
             "leftover": block_axis.sum(jnp.sum(res.leftover)),
+            # realized epsilon granted per analyst row this tick — the
+            # cost-cap / per-tenant spend signal (host maps rows to
+            # tenants at the boundary)
+            "analyst_spend": block_axis.sum(jnp.sum(res.grants,
+                                                    axis=(1, 2))),
             "conservation_gap": block_axis.max(jnp.max(jnp.abs(
                 jnp.where(created, capacity - res.consumed - res.leftover,
                           0.0)))),
@@ -254,13 +278,25 @@ class FlaasService:
                 f"ticks x {trace.blocks_per_tick} blocks/tick)")
         self.cfg = cfg
         self.trace = trace
+        # Tenancy policy: explicit config wins; otherwise adopt the
+        # trace's tier mix (a tiered trace activates SLO/aging/cost-cap
+        # machinery without extra config).  None = plain single-class
+        # service, bitwise-identical to the pre-tenancy behavior.
+        self.tenancy = resolve_policy(
+            cfg.tenancy if cfg.tenancy is not None
+            else getattr(trace, "tiers", None))
         self.state = ServiceState.create(cfg.analyst_slots,
                                          cfg.pipeline_slots, cfg.block_slots)
         self.table = SlotTable(cfg.analyst_slots, cfg.pipeline_slots)
-        self.queue = AdmissionQueue(cfg.max_pending,
-                                    max_pipelines=cfg.pipeline_slots)
+        self.queue = AdmissionQueue(
+            cfg.max_pending, max_pipelines=cfg.pipeline_slots,
+            age_ticks=self.tenancy.age_ticks if self.tenancy else None)
         self.telemetry = StreamingTelemetry(cfg.latency_reservoir,
                                             seed=trace.seed)
+        # host mirrors of each analyst row's tier contract (set at
+        # admission; device side carries only the weight vector)
+        self._row_tier = np.array(["default"] * cfg.analyst_slots, object)
+        self._row_weight = np.ones(cfg.analyst_slots, np.float32)
         # host mirrors of the ledger metadata (MintPlan precomputes the
         # per-tick budget_total/created rows from these, which is what
         # keeps the wrap-free scan body engine-identical)
@@ -279,11 +315,22 @@ class FlaasService:
         for t in range(tick0, tick0 + n_ticks):
             events.extend(self.trace.step(t))
         self.queue.offer(events)
-        placements = self.queue.drain(self.table, self.cfg.admit_batch)
+        placements = self.queue.drain(self.table, self.cfg.admit_batch,
+                                      now_tick=tick0,
+                                      spend=self.telemetry.tenant_spend.get)
         if placements:
+            for sub, row, _ in placements:
+                self._row_tier[row] = sub.tier
+                self._row_weight[row] = np.float32(sub.weight)
             self.state = admit_batch(self.state,
                                      *self._placement_arrays(placements,
-                                                             tick0))
+                                                             tick0),
+                                     weight=self._row_weight.copy())
+            if self.tenancy is not None:
+                self.telemetry.observe_admissions([
+                    (sub.tier, max(0, tick0 - sub.submit_tick),
+                     self.tenancy.spec(sub.tier).slo_admission_ticks)
+                    for sub, _, _ in placements])
         self.telemetry.observe_boundary(self.queue.depth)
         return tick0
 
@@ -382,15 +429,30 @@ class FlaasService:
                 pages_swept=H, slots_evicted=int(hot_evicted.sum()),
                 hot_occupancy=float(hot_live.mean()) / max(MN * H, 1))
 
-        # 4. recycle granted + expired slots, record grant latencies,
-        #    fold telemetry.
+        # 4. recycle granted + expired slots, record grant latencies and
+        #    per-tenant spend, fold telemetry.
         selected = ys.pop("selected")                      # [T, M, N]
         expired = ys.pop("expired", None)
+        spend_t = ys.pop("analyst_spend")                  # [T, M]
+        if self.tenancy is not None:
+            # rows still own their tenants here (release happens below)
+            spend_m = spend_t.sum(axis=0)
+            for m in np.nonzero(spend_m > 0)[0]:
+                owner = int(self.table.row_owner[m])
+                if owner >= 0:
+                    self.telemetry.observe_spend(
+                        owner, str(self._row_tier[m]), float(spend_m[m]))
         done_now = selected.any(axis=0)
         if done_now.any():
             grant_tick = tick0 + np.argmax(selected, axis=0)
             lat = grant_tick[done_now] - self.table.submit_tick[done_now]
             self.telemetry.observe_latencies(lat)
+            if self.tenancy is not None:
+                tiers = self._row_tier[np.where(done_now)[0]]
+                self.telemetry.observe_first_grants([
+                    (str(t), int(l),
+                     self.tenancy.spec(str(t)).slo_first_grant_ticks)
+                    for t, l in zip(tiers, lat)])
         release = done_now
         if expired is not None and expired.any():
             expired_now = expired.any(axis=0)
@@ -400,6 +462,8 @@ class FlaasService:
         self.table.release_done(release)
         self.telemetry.observe_chunk(ys)
         self._wall += time.perf_counter() - t0
+        if self.cfg.telemetry_path:
+            self._export_telemetry()
         return ys
 
     # ------------------------------------------------------------ main loop
@@ -435,6 +499,9 @@ class FlaasService:
             "queue": self.queue.state_dict(),
             "telemetry": self.telemetry.state_dict(),
             "trace": self.trace.state_dict(),
+            "row_tier": [str(t) for t in self._row_tier],
+            "row_weight": self._row_weight.copy(),
+            "tenancy": policy_key(self.tenancy),
         }
 
     def save_checkpoint(self, manager, metadata: Optional[Dict] = None) -> int:
@@ -466,10 +533,10 @@ class FlaasService:
             raise ValueError(
                 "checkpoint carries no service host state (was it saved "
                 "with FlaasService.save_checkpoint?)")
-        if host.get("version") != _CHECKPOINT_VERSION:
+        if host.get("version") not in _COMPAT_VERSIONS:
             raise ValueError(
                 f"service checkpoint version {host.get('version')} not "
-                f"supported (expected {_CHECKPOINT_VERSION})")
+                f"supported (accepted: {_COMPAT_VERSIONS})")
         geometry = (self.cfg.analyst_slots, self.cfg.pipeline_slots,
                     self.cfg.block_slots)
         if tuple(host["geometry"]) != geometry:
@@ -499,9 +566,29 @@ class FlaasService:
         self.queue.load_state_dict(host["queue"])
         self.telemetry.load_state_dict(host["telemetry"])
         self.trace.load_state_dict(host["trace"])
+        if "row_tier" in host:
+            self._row_tier = np.array([str(t) for t in host["row_tier"]],
+                                      object)
+            self._row_weight = np.asarray(host["row_weight"],
+                                          np.float32).copy()
+        else:
+            # v1 (pre-tenancy) checkpoint: every row is the neutral default
+            # tier, matching the all-ones weight leaf the device template
+            # filled in (see checkpoint.manager._unflatten).
+            self._row_tier = np.array(["default"] * self.cfg.analyst_slots,
+                                      object)
+            self._row_weight = np.ones(self.cfg.analyst_slots, np.float32)
         return step
 
     # -------------------------------------------------------------- helpers
+    def _export_telemetry(self) -> None:
+        """Append one NaN-safe JSON line of the running summary to
+        ``cfg.telemetry_path`` (chunk-boundary cadence, append-only so an
+        external collector can tail the file)."""
+        rec = {"tick": int(self.state.tick), **self.summary()}
+        with open(self.cfg.telemetry_path, "a") as f:
+            f.write(json.dumps(json_safe(rec), allow_nan=False) + "\n")
+
     def _placement_arrays(self, placements, boundary_tick: int):
         """Operands for one admission batch: ``[M, N]`` slot-metadata
         tables + flat COO demand triples (see

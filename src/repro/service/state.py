@@ -43,6 +43,7 @@ class ServiceState:
     loss: jax.Array            # [M, N] matching degree l_ij
     spawn_tick: jax.Array      # [M, N] i32 tick the pipeline activates
     done: jax.Array            # [M, N] bool — granted (slot awaiting recycle)
+    weight: jax.Array          # [M] per-analyst tier weight (1.0 default)
     block_budget: jax.Array    # [B] total budget (1.0 pre-creation sentinel)
     block_capacity: jax.Array  # [B] remaining budget (0 pre-creation)
     block_birth: jax.Array     # [B] i32 mint tick (-1 pre-creation)
@@ -62,6 +63,7 @@ class ServiceState:
             loss=jnp.ones((M, N), jnp.float32),
             spawn_tick=jnp.full((M, N), NEVER, jnp.int32),
             done=jnp.zeros((M, N), bool),
+            weight=jnp.ones((M,), jnp.float32),
             block_budget=jnp.ones((B,), jnp.float32),
             block_capacity=jnp.zeros((B,), jnp.float32),
             block_birth=jnp.full((B,), -1, jnp.int32),
@@ -70,14 +72,14 @@ class ServiceState:
 
 jax.tree_util.register_dataclass(
     ServiceState,
-    data_fields=["demand", "arrival", "loss", "spawn_tick", "done",
+    data_fields=["demand", "arrival", "loss", "spawn_tick", "done", "weight",
                  "block_budget", "block_capacity", "block_birth", "tick"],
     meta_fields=[])
 
 
 @jax.jit
 def _admit_apply(state: ServiceState, mask, loss, arrival_seconds,
-                 spawn_ticks, rows, cols, bids, eps) -> ServiceState:
+                 spawn_ticks, weight, rows, cols, bids, eps) -> ServiceState:
     # wipe every (re)filled slot's demand row, then write the new demands
     # as one small COO scatter — no stale demand survives recycling, and
     # nothing proportional to [M, N, B] crosses the host boundary.
@@ -89,11 +91,13 @@ def _admit_apply(state: ServiceState, mask, loss, arrival_seconds,
         loss=jnp.where(mask, loss, state.loss),
         arrival=jnp.where(mask, arrival_seconds, state.arrival),
         spawn_tick=jnp.where(mask, spawn_ticks, state.spawn_tick),
-        done=state.done & ~mask)
+        done=state.done & ~mask,
+        weight=weight)
 
 
 def admit_batch(state: ServiceState, mask, loss, arrival_seconds,
-                spawn_ticks, rows, cols, bids, eps) -> ServiceState:
+                spawn_ticks, rows, cols, bids, eps,
+                weight=None) -> ServiceState:
     """Write one admission batch into the slot table (one fused jit'd
     update; host calls this only at chunk boundaries).
 
@@ -104,7 +108,11 @@ def admit_batch(state: ServiceState, mask, loss, arrival_seconds,
     instead of an [M, N, B] dense block.  The COO arrays are padded to the
     next power of two with duplicates of entry 0 (same index, same value —
     an idempotent write) so the jit cache stays logarithmic in batch
-    size."""
+    size.  ``weight`` is the full post-admission ``[M]`` per-analyst tier
+    weight vector (the server's host mirror); None keeps the current
+    weights."""
+    if weight is None:
+        weight = state.weight
     n = len(rows)
     if n:
         pad = (1 << max(n - 1, 0).bit_length()) - n
@@ -115,6 +123,7 @@ def admit_batch(state: ServiceState, mask, loss, arrival_seconds,
         state, jnp.asarray(mask), jnp.asarray(loss, jnp.float32),
         jnp.asarray(arrival_seconds, jnp.float32),
         jnp.asarray(spawn_ticks, jnp.int32),
+        jnp.asarray(weight, jnp.float32),
         jnp.asarray(np.asarray(rows)[idx], jnp.int32),
         jnp.asarray(np.asarray(cols)[idx], jnp.int32),
         jnp.asarray(np.asarray(bids)[idx], jnp.int32),

@@ -57,6 +57,91 @@ class _Reservoir:
         self.rng.bit_generator.state = d["rng"]
 
 
+class _LatencyHistogram:
+    """Exact per-tier latency percentiles over an unbounded stream.
+
+    Tick latencies are small integers, so a fixed-bin count histogram
+    (clipped at ``bins - 1``) gives *exact* percentiles in O(bins) memory
+    — no reservoir sampling noise in the per-tier SLO metrics.  Also
+    tracks attainment against an optional SLO target (latency <= target
+    counts as a hit)."""
+
+    def __init__(self, bins: int = 512):
+        self.bins = bins
+        self.counts = np.zeros(bins, np.int64)
+        self.n = 0
+        self.slo_target = None
+        self.slo_hits = 0
+
+    def add(self, latency_ticks, slo_target=None) -> None:
+        lats = np.asarray(latency_ticks, np.int64).ravel()
+        np.add.at(self.counts, np.clip(lats, 0, self.bins - 1), 1)
+        self.n += int(lats.size)
+        if slo_target is not None:
+            self.slo_target = int(slo_target)
+            self.slo_hits += int(np.sum(lats <= slo_target))
+
+    def percentile(self, q: float) -> float:
+        if self.n == 0:
+            return float("nan")
+        rank = max(0, int(np.ceil(q / 100.0 * self.n)) - 1)
+        return float(np.searchsorted(np.cumsum(self.counts), rank + 1))
+
+    def summary(self) -> Dict:
+        out = {"count": self.n,
+               "p50": self.percentile(50), "p90": self.percentile(90),
+               "p99": self.percentile(99)}
+        if self.slo_target is not None:
+            out["slo_target_ticks"] = self.slo_target
+            out["slo_attainment"] = (self.slo_hits / self.n
+                                     if self.n else float("nan"))
+        return out
+
+    def state_dict(self) -> dict:
+        return {"bins": self.bins, "counts": self.counts.copy(),
+                "n": self.n, "slo_target": self.slo_target,
+                "slo_hits": self.slo_hits}
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "_LatencyHistogram":
+        h = cls(int(d["bins"]))
+        h.counts = np.asarray(d["counts"], np.int64).copy()
+        h.n = int(d["n"])
+        h.slo_target = d["slo_target"]
+        h.slo_hits = int(d["slo_hits"])
+        return h
+
+
+class _TierStats:
+    """One tier's cumulative service metrics: admission count/latency,
+    time-to-first-grant, realized epsilon spend."""
+
+    def __init__(self):
+        self.admitted = 0
+        self.admission = _LatencyHistogram()
+        self.first_grant = _LatencyHistogram()
+        self.spend = 0.0
+
+    def summary(self) -> Dict:
+        return {"admitted": self.admitted, "spend": self.spend,
+                "admission_latency_ticks": self.admission.summary(),
+                "first_grant_ticks": self.first_grant.summary()}
+
+    def state_dict(self) -> dict:
+        return {"admitted": self.admitted, "spend": self.spend,
+                "admission": self.admission.state_dict(),
+                "first_grant": self.first_grant.state_dict()}
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "_TierStats":
+        t = cls()
+        t.admitted = int(d["admitted"])
+        t.spend = float(d["spend"])
+        t.admission = _LatencyHistogram.from_state_dict(d["admission"])
+        t.first_grant = _LatencyHistogram.from_state_dict(d["first_grant"])
+        return t
+
+
 class StreamingTelemetry:
     """Cumulative service metrics; everything here is host-side numpy."""
 
@@ -81,6 +166,14 @@ class StreamingTelemetry:
         self._hot_occ_sum = 0.0
         self._paged_chunks = 0
         self.mode_ticks = {"wrapfree": 0, "carry": 0, "paged": 0}
+        # tenancy: per-tier latency/SLO/spend stats and per-tenant
+        # cumulative epsilon spend (the cost-cap enforcement signal the
+        # admission queue reads at drain).  Empty until a tiered event is
+        # observed — a plain single-class service carries no tenancy
+        # section in its summary.
+        self._tier_stats = {}        # tier name -> _TierStats
+        self.tenant_spend = {}       # analyst id -> cumulative epsilon
+        self.tenant_tier = {}        # analyst id -> tier name
 
     # ------------------------------------------------------------- updates
     def observe_chunk(self, ys: Dict[str, np.ndarray]) -> None:
@@ -127,20 +220,58 @@ class StreamingTelemetry:
         self.grants += int(latency_ticks.size)
         self._latency.add(latency_ticks)
 
+    # ------------------------------------------------------------- tenancy
+    def _tier(self, name: str) -> _TierStats:
+        if name not in self._tier_stats:
+            self._tier_stats[name] = _TierStats()
+        return self._tier_stats[name]
+
+    def observe_admissions(self, events) -> None:
+        """Admitted submissions as ``(tier, latency_ticks, slo_target)``
+        triples (latency = activation tick - submit tick; slo_target may
+        be None)."""
+        for tier, lat, slo in events:
+            t = self._tier(tier)
+            t.admitted += 1
+            t.admission.add([lat], slo)
+
+    def observe_first_grants(self, events) -> None:
+        """Per-pipeline time-to-first-grant as
+        ``(tier, latency_ticks, slo_target)`` triples."""
+        for tier, lat, slo in events:
+            self._tier(tier).first_grant.add([lat], slo)
+
+    def observe_spend(self, analyst: int, tier: str, amount: float) -> None:
+        """Fold one chunk's realized epsilon grant for ``analyst`` into
+        the per-tenant and per-tier spend ledgers (the cost-cap signal)."""
+        analyst = int(analyst)
+        self.tenant_spend[analyst] = \
+            self.tenant_spend.get(analyst, 0.0) + float(amount)
+        self.tenant_tier[analyst] = tier
+        self._tier(tier).spend += float(amount)
+
     # ---------------------------------------------------------- durability
     def state_dict(self) -> dict:
         """Every cumulative aggregate plus the latency reservoir (buffer
         and RNG state) — restoring this into a fresh instance continues
         the stream bitwise (see :meth:`FlaasService.save_checkpoint`)."""
-        d = {k: v for k, v in self.__dict__.items() if k != "_latency"}
+        d = {k: v for k, v in self.__dict__.items()
+             if k not in ("_latency", "_tier_stats")}
         d["mode_ticks"] = dict(self.mode_ticks)
+        d["tenant_spend"] = dict(self.tenant_spend)
+        d["tenant_tier"] = dict(self.tenant_tier)
         d["latency"] = self._latency.state_dict()
+        d["tier_stats"] = {name: t.state_dict()
+                           for name, t in self._tier_stats.items()}
         return d
 
     def load_state_dict(self, d: dict) -> None:
         d = dict(d)
         self._latency.load_state_dict(d.pop("latency"))
         self.mode_ticks = dict(d.pop("mode_ticks"))
+        # absent from pre-tenancy (PR 6) checkpoints — default to empty
+        self._tier_stats = {name: _TierStats.from_state_dict(td)
+                            for name, td in d.pop("tier_stats", {}).items()}
         for k, v in d.items():
             if k not in self.__dict__:
                 raise ValueError(f"unknown telemetry checkpoint field {k!r}")
@@ -171,6 +302,15 @@ class StreamingTelemetry:
                 max(self._paged_chunks, 1),
             },
         }
+        if self._tier_stats:
+            out["tenancy"] = {
+                "tiers": {name: t.summary()
+                          for name, t in sorted(self._tier_stats.items())},
+                # per-tenant realized spend (string keys: JSON-portable)
+                "tenant_spend": {str(a): s for a, s
+                                 in sorted(self.tenant_spend.items())},
+                "tenants": len(self.tenant_spend),
+            }
         if admission:
             out["admission"] = dict(admission)
             offered = max(admission.get("offered", 0), 1)
@@ -203,3 +343,26 @@ def summary_fingerprint(summary: Dict) -> Dict:
     ``--smoke`` parity row assert bitwise resume."""
     return {k: summary_fingerprint(v) if isinstance(v, dict) else v
             for k, v in summary.items() if k not in WALL_KEYS}
+
+
+def json_safe(obj):
+    """Recursively coerce a summary into plain JSON-serializable types:
+    numpy scalars/arrays -> Python numbers/lists, dict keys -> str, and
+    NaN/inf -> None (strict JSON has no literal for them).  This is the
+    serializer behind ``ServiceConfig(telemetry_path=...)``'s JSON-lines
+    export — the output round-trips through ``json.dumps(...,
+    allow_nan=False)``."""
+    if isinstance(obj, dict):
+        return {str(k): json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [json_safe(v) for v in obj.tolist()]
+    if isinstance(obj, (np.bool_, bool)):
+        return bool(obj)
+    if isinstance(obj, (np.integer, int)):
+        return int(obj)
+    if isinstance(obj, (np.floating, float)):
+        f = float(obj)
+        return f if np.isfinite(f) else None
+    return obj

@@ -34,6 +34,8 @@ import numpy as np
 from repro.core.scenarios import scenario_config
 from repro.core.simulation import ROUND_SECONDS, SimConfig
 
+from .tenancy import policy_key, resolve_policy
+
 PATTERNS = ("poisson", "diurnal", "bursty", "churn")
 
 # Deepest demand: a pipeline demands at most the latest 10 blocks *of each
@@ -51,13 +53,25 @@ def demand_window_ticks(blocks_per_device: int) -> int:
 
 @dataclasses.dataclass
 class Submission:
-    """One analyst batch: the admission/queueing unit."""
+    """One analyst batch: the admission/queueing unit.
+
+    The tenancy fields (tier/priority/weight/deadline_ticks/cost_cap) are
+    stamped by a :class:`~repro.service.tenancy.TenancyPolicy` when the
+    trace carries one; their defaults are *plain class attributes* on
+    purpose — a PR-6 checkpoint's pickled Submissions (which predate
+    tenancy) restore without these instance attributes and fall back to
+    the class defaults, i.e. the neutral single tier."""
 
     analyst: int                  # external analyst identity
     submit_tick: int
     bids: List[np.ndarray]        # per pipeline: global block ids demanded
     eps: List[np.ndarray]         # per pipeline: epsilon demand per block
     loss: np.ndarray              # [n_pipelines] matching degree
+    tier: str = "default"         # tenancy class name
+    priority: int = 0             # strict admission priority (higher first)
+    weight: float = 1.0           # analyst utility weight in SP1
+    deadline_ticks: Optional[int] = None   # admission deadline (shed past it)
+    cost_cap: Optional[float] = None       # cumulative epsilon spend cap
 
     @property
     def n_pipelines(self) -> int:
@@ -75,13 +89,19 @@ class ArrivalTrace:
     def __init__(self, sim: SimConfig, pattern: str = "poisson",
                  seed: Optional[int] = None, *, period: int = 48,
                  amplitude: float = 0.9, p_switch: float = 0.1,
-                 burst: float = 5.0, pool: int = 8):
+                 burst: float = 5.0, pool: int = 8, tiers=None):
         if pattern not in PATTERNS:
             raise ValueError(
                 f"unknown pattern {pattern!r}; expected one of {PATTERNS}")
         self.sim = sim
         self.pattern = pattern
         self.seed = sim.seed if seed is None else seed
+        # Tiered-tenant mix (None = plain single-class trace).  Tier
+        # assignment is a pure function of (seed, analyst id) on its own
+        # RNG stream (tenancy.TenancyPolicy.assign), so stamping consumes
+        # no draws from self.rng: a single-tier stamped trace emits
+        # bitwise-identical submissions to the unstamped one.
+        self.tiers = resolve_policy(tiers)
         self._knobs = dict(period=period, amplitude=amplitude,
                            p_switch=p_switch, burst=burst, pool=pool)
         self.rng = np.random.default_rng(self.seed)
@@ -95,7 +115,8 @@ class ArrivalTrace:
 
     # ------------------------------------------------------------- control
     def reset(self) -> "ArrivalTrace":
-        return ArrivalTrace(self.sim, self.pattern, self.seed, **self._knobs)
+        return ArrivalTrace(self.sim, self.pattern, self.seed,
+                            tiers=self.tiers, **self._knobs)
 
     def precompute(self, n_ticks: int) -> "PrecomputedTrace":
         """Record the next ``n_ticks`` into a replayable trace.
@@ -117,6 +138,7 @@ class ArrivalTrace:
         the checkpointed tick with bitwise-identical draws — the property
         that makes service crash recovery exact at chunk boundaries."""
         return {"kind": "arrival", "pattern": self.pattern, "seed": self.seed,
+                "tiers": policy_key(self.tiers),
                 "rng": self.rng.bit_generator.state,
                 "next_tick": self._next_tick,
                 "next_analyst": self._next_analyst,
@@ -129,6 +151,12 @@ class ArrivalTrace:
                 f"trace checkpoint ({d.get('kind')}/{d.get('pattern')}/"
                 f"seed {d.get('seed')}) does not match this trace "
                 f"(arrival/{self.pattern}/seed {self.seed})")
+        # "tiers" is absent from pre-tenancy (PR-6) checkpoints: the
+        # cursor/draws are tier-independent, so only check when recorded.
+        if "tiers" in d and d["tiers"] != policy_key(self.tiers):
+            raise ValueError(
+                f"trace checkpoint tenant mix {d['tiers']!r} does not "
+                f"match this trace's {policy_key(self.tiers)!r}")
         self.rng.bit_generator.state = d["rng"]
         self._next_tick = int(d["next_tick"])
         self._next_analyst = int(d["next_analyst"])
@@ -189,9 +217,12 @@ class ArrivalTrace:
             bids.append(b.astype(np.int64))
             eps.append(rng.uniform(lo, hi, b.size).astype(np.float32))
             loss.append(rng.uniform(0.5, 1.0))
-        return Submission(analyst=self._analyst_id(), submit_tick=tick,
-                          bids=bids, eps=eps,
-                          loss=np.asarray(loss, np.float32))
+        sub = Submission(analyst=self._analyst_id(), submit_tick=tick,
+                         bids=bids, eps=eps,
+                         loss=np.asarray(loss, np.float32))
+        if self.tiers is not None:
+            self.tiers.stamp(sub, self.seed)
+        return sub
 
     # ------------------------------------------------------------- derived
     def arrival_seconds(self, tick: int) -> float:
@@ -208,6 +239,7 @@ class PrecomputedTrace:
         self.sim = src.sim
         self.pattern = src.pattern
         self.seed = src.seed
+        self.tiers = getattr(src, "tiers", None)
         self.device_budget = src.device_budget
         self.blocks_per_device = src.blocks_per_device
         self.blocks_per_tick = src.blocks_per_tick
@@ -250,7 +282,14 @@ class PrecomputedTrace:
 
 
 def make_trace(scenario: str, pattern: str = "poisson", seed: int = 0,
-               trace_knobs: Optional[Dict] = None, **size) -> ArrivalTrace:
-    """Trace from a named scenario recipe (+ SimConfig size overrides)."""
+               trace_knobs: Optional[Dict] = None, tiers=None,
+               **size) -> ArrivalTrace:
+    """Trace from a named scenario recipe (+ SimConfig size overrides).
+
+    ``tiers`` (a tenant-mix name like ``"free_pro_enterprise"`` or a
+    :class:`~repro.service.tenancy.TenancyPolicy`) stamps every submission
+    with its analyst's tier contract — the tiered-tenant traces over the
+    same 9 scenario recipes."""
     sim = scenario_config(scenario, seed=seed, **size)
-    return ArrivalTrace(sim, pattern, seed, **(trace_knobs or {}))
+    return ArrivalTrace(sim, pattern, seed, tiers=tiers,
+                        **(trace_knobs or {}))

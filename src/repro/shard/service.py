@@ -51,8 +51,8 @@ from .state import (AXIS, ShardedServiceState, mesh_shards, shard_mesh,
                     state_specs)
 
 _METRIC_KEYS = ("round_efficiency", "round_fairness", "round_fairness_norm",
-                "round_jain", "n_allocated", "leftover", "conservation_gap",
-                "overdraw", "selected")
+                "round_jain", "n_allocated", "leftover", "analyst_spend",
+                "conservation_gap", "overdraw", "selected")
 # diagnostics keys carrying a (sharded) block axis, by trailing-dims spec
 _DIAG_SPECS = {"gamma_i": P(None, None, AXIS), "granted_i": P(None, None, AXIS),
                "cap_frac": P(None, AXIS)}

@@ -97,7 +97,7 @@ def state_specs() -> ServiceState:
     on the block axis, pipeline tables replicated."""
     return ServiceState(
         demand=P(None, None, AXIS),
-        arrival=P(), loss=P(), spawn_tick=P(), done=P(),
+        arrival=P(), loss=P(), spawn_tick=P(), done=P(), weight=P(),
         block_budget=P(AXIS), block_capacity=P(AXIS), block_birth=P(AXIS),
         tick=P())
 
