@@ -220,6 +220,106 @@ def smoke() -> tuple:
               file=sys.stderr)
         failures += 1
 
+    # obs_off_parity smoke: a service with the full observability plane
+    # enabled (decision traces at level 2 + audit ledger) must be bitwise
+    # identical to the bare service — per-tick metrics AND final device
+    # state — and the ledger must pass the offline conservation verifier.
+    # ASSERTED, not just reported.
+    try:
+        import dataclasses as _dc
+        import tempfile as _tf
+        import os as _os
+
+        import numpy as np
+
+        from repro.obs import verify_ledger
+        from repro.service import collect_service_metrics
+
+        trace = make_trace("paper_default", "poisson", seed=0, n_devices=4,
+                           pipelines_per_analyst=6).precompute(16)
+        t0 = time.perf_counter()
+        with _tf.TemporaryDirectory() as obsdir:
+            for name in ("dpbalance", "dpf"):
+                def obs_svc(**obs):
+                    return FlaasService(ServiceConfig(
+                        scheduler=name, sched=cfg, analyst_slots=4,
+                        pipeline_slots=6,
+                        block_slots=10 * trace.blocks_per_tick,
+                        chunk_ticks=4, admit_batch=8, max_pending=32,
+                        **obs), trace.reset())
+                ledger = _os.path.join(obsdir, f"{name}.jsonl")
+                off = obs_svc()
+                on = obs_svc(trace_level=2, audit_path=ledger)
+                ya = collect_service_metrics(off, 16)
+                yb = collect_service_metrics(on, 16)
+                on.close()
+                for k in ya:
+                    if not np.array_equal(np.asarray(ya[k]),
+                                          np.asarray(yb[k])):
+                        raise AssertionError(
+                            f"obs-off parity violated on {name}/{k!r}")
+                for f in _dc.fields(off.state):
+                    if not np.array_equal(
+                            np.asarray(getattr(off.state, f.name)),
+                            np.asarray(getattr(on.state, f.name))):
+                        raise AssertionError(
+                            f"obs-off state parity violated on "
+                            f"{name}/{f.name!r}")
+                report = verify_ledger(ledger)
+                if not report["ok"]:
+                    raise AssertionError(
+                        f"audit verification failed: "
+                        f"{report['violations'][:3]}")
+        us_parity = (time.perf_counter() - t0) * 1e6 / (16 * 2)
+        rows.append(("smoke/obs_off_parity", us_parity, derived(
+            schedulers=2, parity=1)))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/obs_off_parity,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
+    # obs_overhead smoke: wall-clock cost of the observability plane —
+    # off vs trace level 1 vs level 2 + audit + live exporter.  Ratios
+    # reported (the paper-size measurement lives in benchmarks/history/).
+    try:
+        import tempfile as _tf
+        import os as _os
+
+        trace = make_trace("paper_default", "poisson", seed=0, n_devices=4,
+                           pipelines_per_analyst=6).precompute(24)
+
+        def timed(**obs):
+            def one_run():
+                svc = FlaasService(ServiceConfig(
+                    scheduler="dpf", sched=cfg, analyst_slots=4,
+                    pipeline_slots=6,
+                    block_slots=10 * trace.blocks_per_tick,
+                    chunk_ticks=4, admit_batch=8, max_pending=32, **obs),
+                    trace.reset())
+                t0 = time.perf_counter()
+                svc.run(24)
+                us = (time.perf_counter() - t0) * 1e6 / 24
+                svc.close()
+                return us
+            one_run()                     # warm the per-variant jit cache
+            return one_run()              # steady-state wall only
+
+        with _tf.TemporaryDirectory() as obsdir:
+            us_off = timed()
+            us_l1 = timed(trace_level=1)
+            us_l2 = timed(trace_level=2, metrics_port=0,
+                          audit_path=_os.path.join(obsdir, "l.jsonl"))
+        rows.append(("smoke/obs_overhead", us_off, derived(
+            level1_us=round(us_l1, 1), level2_us=round(us_l2, 1),
+            level1_ratio=round(us_l1 / us_off, 3),
+            level2_ratio=round(us_l2 / us_off, 3))))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/obs_overhead,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
     # shard_throughput smoke: the sharded service over however many
     # devices the runner has (1 on a plain CPU; the sharded CI job runs
     # with an 8-device emulated mesh), ring wrap included.

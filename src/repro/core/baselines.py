@@ -81,7 +81,11 @@ def _sequential_grant(rnd: dm.RoundInputs, cfg: SchedulerConfig, key_fn,
         consumed=consumed, utility=util, efficiency=eff, fairness=fair,
         platform=plat, jain=ut.jain_index(util, view.mask),
         n_allocated=jnp.sum(sel), leftover=leftover,
-        sp1_violation=jnp.zeros(()))
+        sp1_violation=jnp.zeros(()),
+        # observability extras: the baselines have no SP1/SP2 stages, so
+        # only the realized dominant share is meaningful (rest stay None —
+        # repro.obs.tracing substitutes static zeros / unit scale).
+        mu_real=mu_real)
 
 
 def _dpf_key(rnd, gamma, mu_ij, block_axis=LOCAL):

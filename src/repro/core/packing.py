@@ -46,6 +46,10 @@ class PackResult(NamedTuple):
     selected: jax.Array   # [N] bool
     used: jax.Array       # [K] budget consumed
     objective: jax.Array  # scalar Eq-20 value
+    # Observability extras (trailing, defaulted — absent values are static
+    # empty pytree nodes, so older constructors/unpackers keep working):
+    swapped: jax.Array | None = None  # scalar bool: refinement changed greedy
+    water: jax.Array | None = None    # scalar: post-boost min leftover share
 
 
 def greedy_cover(gamma, mu, active, budget, block_axis: BlockAxis = LOCAL):
@@ -159,13 +163,21 @@ def pack_analyst(gamma, mu, a, active, budget, kappa_max: float = 8.0,
                  block_axis: BlockAxis = LOCAL,
                  use_pallas: bool = False) -> PackResult:
     """Full SP2 for one analyst.  vmap over analysts for the batched version."""
-    sel = greedy_cover(gamma, mu, active, budget, block_axis)
+    sel0 = greedy_cover(gamma, mu, active, budget, block_axis)
     if refine:
-        sel = swap_refine(gamma, mu, a, active, sel, budget, kappa_max,
+        sel = swap_refine(gamma, mu, a, active, sel0, budget, kappa_max,
                           block_axis, incremental, use_pallas)
+        swapped = jnp.any(sel != sel0)
+    else:
+        sel, swapped = sel0, jnp.zeros((), bool)
     x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget,
                                       kappa_max, block_axis, use_pallas)
-    return PackResult(x_ij=x, selected=sel, used=used, objective=obj)
+    # SP2 boost water level: the binding leftover share after the kappa
+    # sweep (what the next boost step would have had to fit under).  Only
+    # consumed by decision tracing; dead code (DCE'd) otherwise.
+    water = block_axis.min(jnp.min(budget - used))
+    return PackResult(x_ij=x, selected=sel, used=used, objective=obj,
+                      swapped=swapped, water=water)
 
 
 pack_all = jax.vmap(pack_analyst,

@@ -64,6 +64,18 @@ class RoundResult(NamedTuple):
     n_allocated: jax.Array  # scalar pipelines granted
     leftover: jax.Array     # [K] remaining capacity after the round
     sp1_violation: jax.Array
+    # --- observability extras (PR 8) -----------------------------------
+    # Trailing fields with ``None`` defaults: every value below is an
+    # intermediate the round already computes (zero extra device work);
+    # ``None`` is a static empty pytree node, so results built without
+    # them flow through jit/vmap/scan unchanged and old keyword
+    # constructors keep working.  Consumed by ``repro.obs.tracing``.
+    sp1_iters: jax.Array | None = None      # scalar i32 dual-ascent iters
+    mu_real: jax.Array | None = None        # [M] realized dominant share
+    sp2_objective: jax.Array | None = None  # [M] boosted Eq-20 objective
+    sp2_water: jax.Array | None = None      # [M] post-boost min leftover
+    swap_accepted: jax.Array | None = None  # [M] bool: swap refine fired
+    grant_scale: jax.Array | None = None    # scalar overdraw-guard scale
 
 
 def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
@@ -129,7 +141,10 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
         grants=grants, consumed=consumed, utility=util, efficiency=eff,
         fairness=fair, platform=plat, jain=ut.jain_index(util, view.mask),
         n_allocated=jnp.sum(pack.selected), leftover=leftover,
-        sp1_violation=sp1.violation)
+        sp1_violation=sp1.violation,
+        sp1_iters=sp1.iters, mu_real=mu_real, sp2_objective=pack.objective,
+        sp2_water=pack.water, swap_accepted=pack.swapped,
+        grant_scale=grant_scale)
 
 
 @functools.lru_cache(maxsize=32)

@@ -1,0 +1,44 @@
+"""Observability plane for the FLaaS service (PR 8).
+
+Four parts, all host-side except the trace *outputs* (which are extra
+``lax.scan`` ys gated statically by ``ServiceConfig(trace_level=...)``):
+
+* :mod:`repro.obs.registry` — labeled metrics registry
+  (counters/gauges/histograms, O(1) hot-path updates) plus the
+  ``absorb_summary`` adapter that maps a service summary dict onto the
+  stable metric catalog (see ``docs/observability.md``).
+* :mod:`repro.obs.exporter` — Prometheus text-format exposition
+  (:func:`render_prometheus`), a stdlib HTTP ``/metrics`` endpoint
+  (:class:`MetricsServer`), and the unified append-only
+  :class:`JsonlSink` (flush-per-record, fsync on close).
+* :mod:`repro.obs.tracing` — jit-safe per-tick decision traces
+  (SP1 dual-ascent iterations / KKT residuals, SP2 water levels, swap
+  counts, dominant shares) drained at chunk boundaries into a bounded
+  host buffer with Chrome-trace-event / Perfetto export.
+* :mod:`repro.obs.profiler` — wall-clock phase timers (compile vs.
+  execute, host sync, admission drain, checkpoint save) with optional
+  ``jax.profiler`` annotation hooks.
+* :mod:`repro.obs.audit` — append-only checksummed per-grant privacy
+  audit ledger plus the offline conservation verifier
+  (``python -m repro.obs.audit verify <ledger>``).
+
+The whole plane is bitwise-neutral when disabled: at ``trace_level=0``
+with no metrics port / audit path, the compiled tick program and every
+per-tick metric are identical to a build without this package.
+"""
+from .audit import AuditWriter, read_ledger, verify_ledger
+from .exporter import JsonlSink, MetricsServer, render_prometheus
+from .profiler import PhaseProfiler
+from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                       absorb_summary)
+from .tracing import (TRACE_KEY_PREFIX, DecisionTrace, trace_round_outputs,
+                      trace_ys_keys)
+
+__all__ = [
+    "AuditWriter", "read_ledger", "verify_ledger",
+    "JsonlSink", "MetricsServer", "render_prometheus",
+    "PhaseProfiler",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "absorb_summary",
+    "TRACE_KEY_PREFIX", "DecisionTrace", "trace_round_outputs",
+    "trace_ys_keys",
+]

@@ -1,0 +1,166 @@
+"""Jit-safe per-tick decision traces.
+
+The scheduler's internals (SP1 dual-ascent iterations and KKT residual,
+SP2 boost water level, swap candidates/acceptances, per-analyst dominant
+shares) are all intermediates the round already computes —
+:class:`~repro.core.scheduler.RoundResult` carries them as trailing
+optional fields.  :func:`trace_round_outputs` turns them into extra
+``lax.scan`` ys inside the service tick body, gated *statically* by
+``ServiceConfig(trace_level=...)``:
+
+* level 0 — no trace keys exist; the compiled program is identical to a
+  build without this module (bitwise-neutral, asserted in tests and the
+  ``obs_off_parity`` smoke row);
+* level 1 — SP1 internals + per-analyst allocation/utility/dominant
+  share (5 keys);
+* level 2 — adds SP2 internals: boosted objective, boost water level,
+  swap-candidate counts and accepted swaps, overdraw-guard scale.
+
+Every trace value is replicated across shards (SP1/SP2 aggregates are
+post-collective), so the sharded service exports them with replicated
+out-specs — no extra collectives at level >= 1 beyond what the round
+already runs.
+
+The service drains trace ys from the chunk output at the boundary into a
+:class:`DecisionTrace` — a bounded host-side ring of per-tick records
+with Chrome-trace-event (Perfetto-loadable) export.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+TRACE_KEY_PREFIX = "trace_"
+
+_L1_KEYS = ("trace_sp1_iters", "trace_sp1_residual", "trace_x_analyst",
+            "trace_utility", "trace_dominant_share")
+_L2_KEYS = ("trace_sp2_objective", "trace_boost_water",
+            "trace_swap_candidates", "trace_swap_accepted",
+            "trace_grant_scale")
+
+
+def trace_ys_keys(level: int) -> Tuple[str, ...]:
+    """The exact ys key set a chunk emits at ``trace_level=level`` (what
+    the sharded out-specs and the drain are keyed on)."""
+    if level <= 0:
+        return ()
+    return _L1_KEYS + (_L2_KEYS if level >= 2 else ())
+
+
+def trace_round_outputs(res, pending, level: int) -> Dict[str, jnp.ndarray]:
+    """Per-tick trace ys from one round's :class:`RoundResult`.
+
+    ``pending`` is the [M, N] active mask the round saw (for the
+    swap-candidate count: a refinement pass over ``m`` selected of ``n``
+    active pipelines evaluates ``m * (n - m)`` candidates, the compacted
+    grid of :func:`repro.core.swap.swap_candidates`).  Baseline schedulers
+    leave the SP1/SP2 fields ``None``; static zeros / unit scale are
+    substituted so the trace schema is scheduler-independent.
+    """
+    if level <= 0:
+        return {}
+    M = res.utility.shape[0]
+    f32 = res.utility.dtype
+    zeros_m = jnp.zeros((M,), f32)
+    out = {
+        "trace_sp1_iters": (jnp.zeros((), jnp.int32)
+                            if res.sp1_iters is None
+                            else res.sp1_iters.astype(jnp.int32)),
+        "trace_sp1_residual": res.sp1_violation.astype(f32),
+        "trace_x_analyst": res.x_analyst,
+        "trace_utility": res.utility,
+        "trace_dominant_share": (zeros_m if res.mu_real is None
+                                 else res.mu_real),
+    }
+    if level >= 2:
+        m_sel = jnp.sum(res.selected, axis=1).astype(jnp.int32)
+        n_act = jnp.sum(pending, axis=1).astype(jnp.int32)
+        out["trace_sp2_objective"] = (zeros_m if res.sp2_objective is None
+                                      else res.sp2_objective)
+        out["trace_boost_water"] = (zeros_m if res.sp2_water is None
+                                    else res.sp2_water)
+        out["trace_swap_candidates"] = m_sel * (n_act - m_sel)
+        out["trace_swap_accepted"] = (
+            jnp.zeros((M,), bool) if res.swap_accepted is None
+            else res.swap_accepted)
+        out["trace_grant_scale"] = (jnp.ones((), f32)
+                                    if res.grant_scale is None
+                                    else res.grant_scale)
+    return out
+
+
+def split_trace_ys(ys: Dict[str, np.ndarray]):
+    """Pop every ``trace_*`` key out of a chunk's host-side ys dict;
+    returns ``(ys_without_traces, traces)``."""
+    traces = {k: ys.pop(k) for k in list(ys) if k.startswith(TRACE_KEY_PREFIX)}
+    return ys, traces
+
+
+class DecisionTrace:
+    """Bounded host-side ring of per-tick decision records.
+
+    ``extend`` ingests one chunk's trace ys ([T]-leading arrays) at the
+    boundary; the newest ``max_ticks`` ticks are retained.  Export is
+    Chrome trace-event JSON (counter events on the tick timeline, one
+    process per series, per-analyst series as event args), loadable in
+    Perfetto / ``chrome://tracing``.
+    """
+
+    # wall micros per tick on the trace timeline (display scale only)
+    _US_PER_TICK = 1000.0
+
+    def __init__(self, level: int, max_ticks: int = 4096):
+        self.level = int(level)
+        self.max_ticks = int(max_ticks)
+        self.ticks: deque = deque(maxlen=self.max_ticks)
+
+    def __len__(self) -> int:
+        return len(self.ticks)
+
+    def extend(self, tick0: int, traces: Dict[str, np.ndarray]) -> None:
+        if not traces:
+            return
+        n = next(iter(traces.values())).shape[0]
+        for t in range(n):
+            rec = {"tick": int(tick0) + t}
+            for key, arr in traces.items():
+                v = np.asarray(arr[t])
+                rec[key[len(TRACE_KEY_PREFIX):]] = (
+                    v.item() if v.ndim == 0 else v)
+            self.ticks.append(rec)
+
+    def records(self):
+        """Per-tick records with numpy arrays coerced to lists."""
+        out = []
+        for rec in self.ticks:
+            out.append({k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                        for k, v in rec.items()})
+        return out
+
+    def to_chrome_trace(self) -> dict:
+        """Chrome trace-event JSON: ``ph: "C"`` counter events, ``ts`` =
+        tick * 1ms on the display timeline."""
+        events = []
+        for rec in self.ticks:
+            ts = rec["tick"] * self._US_PER_TICK
+            for key, v in rec.items():
+                if key == "tick":
+                    continue
+                if isinstance(v, np.ndarray):
+                    args = {f"a{i}": float(x) for i, x in enumerate(v)}
+                else:
+                    args = {"value": float(v)}
+                events.append({"name": key, "ph": "C", "ts": ts,
+                               "pid": 1, "tid": 1, "args": args})
+        return {"traceEvents": events,
+                "displayTimeUnit": "ms",
+                "otherData": {"trace_level": self.level,
+                              "ticks": len(self.ticks)}}
+
+    def save(self, path: str) -> None:
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(self.to_chrome_trace(), f)

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import json
 import time
 from typing import Dict, Optional
 
@@ -36,21 +35,27 @@ from repro.core.engine import round_diagnostics
 from repro.core.registry import get_round_fn
 from repro.core.scheduler import SchedulerConfig
 from repro.core.simulation import ROUND_SECONDS
+from repro.obs.audit import AuditWriter
+from repro.obs.exporter import JsonlSink, MetricsServer
+from repro.obs.profiler import PhaseProfiler
+from repro.obs.registry import MetricsRegistry, absorb_summary
+from repro.obs.tracing import DecisionTrace, split_trace_ys, \
+    trace_round_outputs
 
 from .queue import AdmissionQueue
 from .state import NEVER, ServiceState, SlotTable, admit_batch, plan_mints
-from .telemetry import StreamingTelemetry, json_safe
+from .telemetry import StreamingTelemetry
 from .tenancy import policy_key, resolve_policy
 from .traces import ArrivalTrace, demand_window_ticks
 
 # Bump when checkpoint_host_state()'s schema changes incompatibly.
 # Version 2 (tenancy): adds the per-row tier/weight mirrors, the
 # ServiceState.weight device leaf, per-tier telemetry, and the versioned
-# per-class admission queue.  Version-1 (PR 6) checkpoints still restore:
-# every tenancy field defaults to the neutral single tier (see
-# load_checkpoint).
-_CHECKPOINT_VERSION = 2
-_COMPAT_VERSIONS = (1, 2)
+# per-class admission queue.  Version 3 (observability): adds the metrics
+# registry / phase profiler snapshots and the audit slot mirrors — all
+# optional, so v1/v2 checkpoints restore with those planes empty.
+_CHECKPOINT_VERSION = 3
+_COMPAT_VERSIONS = (1, 2, 3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,13 +79,33 @@ class ServiceConfig:
     # stamped on the submissions themselves.
     tenancy: object = None
     # JSON-lines telemetry export: append summary() at every chunk
-    # boundary (NaN-safe plain-dict serialization; see telemetry.json_safe)
+    # boundary (NaN-safe plain-dict serialization; see telemetry.json_safe).
+    # Routed through repro.obs.exporter.JsonlSink: a persistent append
+    # handle, flushed per chunk, fsynced on close().
     telemetry_path: Optional[str] = None
+    # ------------------------------------------------------ observability
+    # Prometheus /metrics endpoint: None = off, 0 = ephemeral port (read
+    # it back from service.metrics_server.port), else the literal port.
+    metrics_port: Optional[int] = None
+    # Decision tracing (repro.obs.tracing).  Static gate: 0 compiles the
+    # trace outputs out entirely (bitwise-neutral), 1 adds SP1 internals +
+    # per-analyst shares, 2 adds SP2 water levels / swap counts / the
+    # overdraw-guard scale.
+    trace_level: int = 0
+    trace_ticks: int = 4096        # host-side trace ring (newest ticks kept)
+    # Append-only checksummed per-grant audit ledger (repro.obs.audit);
+    # None = off.  Enabling it adds the per-pipeline grant ratios to the
+    # chunk outputs for host-side attribution.
+    audit_path: Optional[str] = None
+    # Wrap tick-loop phases in jax.profiler.TraceAnnotation (the wall-clock
+    # phase profiler itself is always on — it is host-side only).
+    profile_annotations: bool = False
 
 
 def _chunk_metrics(state: ServiceState, mint_ops, *,
                    cfg: SchedulerConfig, round_fn, n_ticks: int,
                    mode: str, diagnostics: bool = False,
+                   trace_level: int = 0, audit: bool = False,
                    block_axis: BlockAxis = LOCAL):
     """Traceable: run ``n_ticks`` service ticks in one ``lax.scan``.
 
@@ -181,6 +206,17 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
         }
         if diagnostics:
             out.update(round_diagnostics(rnd, res, cfg, block_axis))
+        # Observability ys — both statically gated, so the default
+        # (trace_level=0, no audit) scan program is identical to a build
+        # without the obs plane.  Every value is an intermediate the round
+        # already computed; nothing feeds back into the carry.
+        if trace_level > 0:
+            out.update(trace_round_outputs(res, pending, trace_level))
+        if audit:
+            out["audit_x"] = res.x_pipeline          # [M, N] grant ratios
+            out["audit_scale"] = (jnp.ones((), f32)
+                                  if res.grant_scale is None
+                                  else res.grant_scale)
         return res, out
 
     def body(carry, xs):
@@ -254,11 +290,13 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
 
 @functools.lru_cache(maxsize=128)
 def _compiled_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
-                    mode: str, diagnostics: bool = False):
+                    mode: str, diagnostics: bool = False,
+                    trace_level: int = 0, audit: bool = False):
     round_fn = get_round_fn(scheduler)
     return jax.jit(functools.partial(
         _chunk_metrics, cfg=cfg, round_fn=round_fn, n_ticks=n_ticks,
-        mode=mode, diagnostics=diagnostics))
+        mode=mode, diagnostics=diagnostics, trace_level=trace_level,
+        audit=audit))
 
 
 class FlaasService:
@@ -303,6 +341,21 @@ class FlaasService:
         self._ledger_budget = np.ones(cfg.block_slots, np.float32)
         self._ledger_birth = np.full(cfg.block_slots, -1, np.int32)
         self._wall = 0.0
+        # ------------------------------------------------- observability
+        self.registry = MetricsRegistry()
+        self.profiler = PhaseProfiler(annotate=cfg.profile_annotations)
+        self._compiled_keys = set()      # (mode, T) shapes already executed
+        self.trace_sink = (DecisionTrace(cfg.trace_level, cfg.trace_ticks)
+                           if cfg.trace_level > 0 else None)
+        self._telemetry_sink = (JsonlSink(cfg.telemetry_path)
+                                if cfg.telemetry_path else None)
+        self.metrics_server = (MetricsServer(self.registry, cfg.metrics_port)
+                               if cfg.metrics_port is not None else None)
+        # audit: per-slot host mirrors of the admitted demand (global bids
+        # + epsilon), attributed to the ledger at grant, dropped at release
+        self._audit_slots: Dict[tuple, dict] = {}
+        self.audit = (AuditWriter(cfg.audit_path, self._audit_meta())
+                      if cfg.audit_path else None)
 
     # ------------------------------------------------------------ boundary
     def admit_boundary(self, n_ticks: int) -> int:
@@ -355,7 +408,9 @@ class FlaasService:
         """Compiled ``(state, mint_ops) -> (final_carry, ys)`` chunk step.
         Subclass hook: the sharded service returns a shard_map'd step."""
         return _compiled_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
-                               mode, self.cfg.diagnostics)
+                               mode, self.cfg.diagnostics,
+                               self.cfg.trace_level,
+                               self.cfg.audit_path is not None)
 
     def _plan_chunk(self, tick0: int, n_ticks: int):
         """(plan, mode, device mint_ops, compiled step) for the upcoming
@@ -397,14 +452,21 @@ class FlaasService:
         """One boundary-to-boundary step: poll/admit, scan, recycle."""
         T = self.cfg.chunk_ticks if n_ticks is None else n_ticks
         t0 = time.perf_counter()
-        tick0 = self.admit_boundary(T)
+        with self.profiler.phase("admit_drain"):
+            tick0 = self.admit_boundary(T)
 
         # plan this chunk's block mints; run the compiled scan; graft the
         # changed carries + ledger-metadata mirrors back onto the state.
         # (In paged mode final[0] is the cold store with the hot ring
         # already swept back in — the boundary eviction sweep.)
-        plan, mode, ops, step = self._plan_chunk(tick0, T)
-        final, ys = step(self.state, ops)
+        with self.profiler.phase("plan_mints"):
+            plan, mode, ops, step = self._plan_chunk(tick0, T)
+        key = (self.cfg.scheduler, mode, T)
+        phase = ("chunk_execute" if key in self._compiled_keys
+                 else "chunk_compile_execute")
+        self._compiled_keys.add(key)
+        with self.profiler.phase(phase):
+            final, ys = step(self.state, ops)
         self._ledger_budget = plan.next_budget
         self._ledger_birth = plan.next_birth
         self.state = dataclasses.replace(
@@ -414,7 +476,16 @@ class FlaasService:
             block_budget=jnp.asarray(plan.next_budget),
             block_birth=jnp.asarray(plan.next_birth),
             tick=jnp.asarray(tick0 + T, jnp.int32))
-        ys = {k: np.asarray(v) for k, v in ys.items()}
+        with self.profiler.phase("host_sync"):
+            ys = {k: np.asarray(v) for k, v in ys.items()}
+        # chunk-boundary observability drains: decision traces out of the
+        # ys dict into the host ring; audit grant ratios held for the
+        # grant-attribution pass below.
+        ys, traces = split_trace_ys(ys)
+        if self.trace_sink is not None:
+            self.trace_sink.extend(tick0, traces)
+        audit_x = ys.pop("audit_x", None)            # [T, M, N]
+        audit_scale = ys.pop("audit_scale", None)    # [T]
         if self.cfg.validate:
             self._check_conservation(ys)
 
@@ -453,6 +524,10 @@ class FlaasService:
                     (str(t), int(l),
                      self.tenancy.spec(str(t)).slo_first_grant_ticks)
                     for t, l in zip(tiers, lat)])
+            if self.audit is not None:
+                # attribute every grant to its global blocks BEFORE the
+                # slot-table release below recycles the rows
+                self._audit_grants(tick0, selected, audit_x, audit_scale)
         release = done_now
         if expired is not None and expired.any():
             expired_now = expired.any(axis=0)
@@ -460,9 +535,21 @@ class FlaasService:
                 int((expired_now & self.table.occupied).sum()))
             release = release | expired_now
         self.table.release_done(release)
-        self.telemetry.observe_chunk(ys)
+        if self._audit_slots:
+            for m, n in zip(*np.nonzero(release)):
+                self._audit_slots.pop((int(m), int(n)), None)
+        with self.profiler.phase("telemetry_fold"):
+            self.telemetry.observe_chunk(ys)
         self._wall += time.perf_counter() - t0
-        if self.cfg.telemetry_path:
+        self.registry.histogram(
+            "flaas_chunk_seconds",
+            "Boundary-to-boundary chunk wall time").observe(
+            time.perf_counter() - t0)
+        if self.audit is not None:
+            self.audit.flush()
+        if self.metrics_server is not None:
+            self.publish_metrics()
+        if self._telemetry_sink is not None:
             self._export_telemetry()
         return ys
 
@@ -478,6 +565,82 @@ class FlaasService:
     def summary(self) -> Dict:
         return self.telemetry.summary(admission=self.queue.stats.snapshot(),
                                       wall_seconds=self._wall)
+
+    # -------------------------------------------------------- observability
+    def publish_metrics(self) -> None:
+        """Fold the current summary + profiler totals into the metrics
+        registry (the ``flaas_*`` catalog).  Runs automatically at every
+        chunk boundary while the exporter endpoint is up; call it manually
+        to inspect ``service.registry`` without one."""
+        absorb_summary(self.registry, self.summary())
+        self.profiler.publish(self.registry)
+
+    def close(self) -> None:
+        """Orderly shutdown of the observability plane: flush + fsync the
+        telemetry sink and audit ledger, stop the metrics endpoint.  The
+        service itself stays usable (sinks do not reopen).  Idempotent;
+        also runs on ``with FlaasService(...) as service:`` exit."""
+        if self.metrics_server is not None:
+            self.publish_metrics()
+            self.metrics_server.close()
+            self.metrics_server = None
+        if self.audit is not None:
+            self.audit.close()
+            self.audit = None
+        if self._telemetry_sink is not None:
+            self._telemetry_sink.close()
+            self._telemetry_sink = None
+
+    def __enter__(self) -> "FlaasService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _audit_meta(self) -> Dict:
+        """Budget geometry + writer identity for the audit ledger's
+        ``open`` record (what the offline verifier maps bids to budgets
+        with)."""
+        return {
+            "device_budget": [float(b) for b in
+                              np.asarray(self.trace.device_budget).ravel()],
+            "blocks_per_device": int(self.trace.blocks_per_device),
+            "n_devices": int(self.trace.blocks_per_tick //
+                             self.trace.blocks_per_device),
+            "block_slots": int(self.cfg.block_slots),
+            "layout_shards": self._ring_layout_shards(),
+            "scheduler": self.cfg.scheduler,
+            "tick": int(self.state.tick),
+        }
+
+    def _audit_grants(self, tick0: int, selected: np.ndarray,
+                      audit_x: np.ndarray, audit_scale: np.ndarray) -> None:
+        """Write one ledger record per pipeline granted this chunk.
+
+        The admission mirror holds each slot's *global* block ids and
+        epsilon demand; the entries still live at the grant tick are
+        exactly those whose slot had not been re-minted yet (block
+        ``bid``'s successor ``bid + B`` mints at tick ``(bid + B) / bpr``
+        — the same wipe predicate the scan body applies), so the host
+        attribution reproduces the device grant epsilon-for-epsilon."""
+        B = self.cfg.block_slots
+        bpr = self.trace.blocks_per_tick
+        rel = np.argmax(selected, axis=0)                  # [M, N]
+        for m, n in zip(*np.nonzero(selected.any(axis=0))):
+            rec = self._audit_slots.get((int(m), int(n)))
+            if rec is None:
+                continue        # admitted before auditing was enabled
+            tr = int(rel[m, n])
+            gt = tick0 + tr
+            x = np.float32(audit_x[tr, m, n]) * np.float32(audit_scale[tr])
+            live = (rec["bids"] + B) // bpr > gt
+            if x <= 0.0 or not live.any():
+                continue        # selected with zero realized grant
+            eps = rec["eps"][live].astype(np.float32) * x
+            self.audit.grant(
+                tick=gt, analyst=rec["analyst"], pipeline=int(n),
+                tier=rec["tier"], x=float(x),
+                bids=rec["bids"][live], eps=eps)
 
     # ----------------------------------------------------------- durability
     def checkpoint_host_state(self) -> Dict:
@@ -502,6 +665,20 @@ class FlaasService:
             "row_tier": [str(t) for t in self._row_tier],
             "row_weight": self._row_weight.copy(),
             "tenancy": policy_key(self.tenancy),
+            # v3 observability plane: registry counters resume bitwise,
+            # profiler wall totals accumulate across restores, and the
+            # audit mirrors keep not-yet-granted pipelines attributable
+            # after a restore (the ledger file itself is append-only on
+            # disk — reopening continues its hash chain).
+            "obs": {
+                "registry": self.registry.state_dict(),
+                "profiler": self.profiler.state_dict(),
+                "audit_slots": {k: {kk: (vv.copy()
+                                         if isinstance(vv, np.ndarray)
+                                         else vv)
+                                    for kk, vv in rec.items()}
+                                for k, rec in self._audit_slots.items()},
+            },
         }
 
     def save_checkpoint(self, manager, metadata: Optional[Dict] = None) -> int:
@@ -512,8 +689,9 @@ class FlaasService:
         meta = {"scheduler": self.cfg.scheduler,
                 "layout_shards": self._ring_layout_shards(),
                 **(metadata or {})}
-        manager.save(step, self.state, metadata=meta,
-                     host_state=self.checkpoint_host_state())
+        with self.profiler.phase("checkpoint_save"):
+            manager.save(step, self.state, metadata=meta,
+                         host_state=self.checkpoint_host_state())
         return step
 
     def load_checkpoint(self, manager, step: Optional[int] = None) -> int:
@@ -578,16 +756,33 @@ class FlaasService:
             self._row_tier = np.array(["default"] * self.cfg.analyst_slots,
                                       object)
             self._row_weight = np.ones(self.cfg.analyst_slots, np.float32)
+        # v3 observability plane (pre-v3 checkpoints: counters start
+        # fresh; pipelines admitted before the restore are simply absent
+        # from the audit ledger — conservation is an upper bound, so the
+        # verifier stays sound).
+        obs = host.get("obs", {})
+        if "registry" in obs:
+            self.registry.load_state_dict(obs["registry"])
+        if "profiler" in obs:
+            self.profiler.load_state_dict(obs["profiler"])
+        self._audit_slots = {
+            tuple(k): {"analyst": int(rec["analyst"]),
+                       "tier": str(rec["tier"]),
+                       "bids": np.asarray(rec["bids"], np.int64).copy(),
+                       "eps": np.asarray(rec["eps"], np.float32).copy()}
+            for k, rec in obs.get("audit_slots", {}).items()}
         return step
 
     # -------------------------------------------------------------- helpers
     def _export_telemetry(self) -> None:
         """Append one NaN-safe JSON line of the running summary to
         ``cfg.telemetry_path`` (chunk-boundary cadence, append-only so an
-        external collector can tail the file)."""
-        rec = {"tick": int(self.state.tick), **self.summary()}
-        with open(self.cfg.telemetry_path, "a") as f:
-            f.write(json.dumps(json_safe(rec), allow_nan=False) + "\n")
+        external collector can tail the file).  The sink keeps one
+        persistent handle — flushed per record, fsynced by
+        :meth:`close` — and appends to pre-existing files, so restarts
+        and checkpoint restores extend one continuous stream."""
+        self._telemetry_sink.write(
+            {"tick": int(self.state.tick), **self.summary()})
 
     def _placement_arrays(self, placements, boundary_tick: int):
         """Operands for one admission batch: ``[M, N]`` slot-metadata
@@ -623,6 +818,15 @@ class FlaasService:
                 slots = self._slot_of(sub.bids[j])
                 keep = ((self._ledger_birth[slots] <= sub.bids[j] // bpr) &
                         ((sub.bids[j] + B) // bpr > spawn_tick))
+                if self.audit is not None:
+                    # audit mirror: global (layout-independent) bids + the
+                    # epsilon written to the device, for grant attribution
+                    self._audit_slots[(int(row), int(c))] = {
+                        "analyst": int(sub.analyst), "tier": str(sub.tier),
+                        "bids": np.asarray(sub.bids[j],
+                                           np.int64)[keep].copy(),
+                        "eps": np.asarray(sub.eps[j],
+                                          np.float32)[keep].copy()}
                 rows.append(np.full(int(keep.sum()), row, np.int64))
                 cols.append(np.full(int(keep.sum()), c, np.int64))
                 bids.append(slots[keep])

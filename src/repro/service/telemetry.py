@@ -24,14 +24,35 @@ class _Reservoir:
         self.rng = np.random.default_rng(seed)
 
     def add(self, values: np.ndarray) -> None:
-        for v in np.asarray(values, np.float64).ravel():
-            if self.n_seen < self.capacity:
-                self.buf[self.n_seen] = v
-            else:
-                j = int(self.rng.integers(self.n_seen + 1))
-                if j < self.capacity:
-                    self.buf[j] = v
-            self.n_seen += 1
+        """Vectorized Vitter replacement (one batched draw per chunk).
+
+        The fill phase is a slice copy; the replacement phase draws every
+        index in ONE ``rng.integers`` call with a per-value ``high`` array
+        (value ``i`` of the batch is the ``n0 + i + 1``-th seen, so
+        ``j_i ~ U[0, n0 + i]`` — the same marginal as the scalar loop).
+        Duplicate hits on one buffer cell resolve last-writer-wins via
+        fancy assignment, matching sequential overwrite order.  NOTE: the
+        RNG *stream* differs from the pre-PR-8 per-value loop (batched
+        generation consumes the bit stream in a different order), so
+        reservoirs are statistically unchanged but not draw-for-draw
+        reproductions of old runs — the state dict carries ``"v": 2`` to
+        mark the regime.  The checkpoint contract is intact: restoring
+        ``state_dict()`` mid-stream reproduces an uninterrupted run's
+        subsequent draws bitwise."""
+        vals = np.asarray(values, np.float64).ravel()
+        if vals.size == 0:
+            return
+        fill = min(max(self.capacity - self.n_seen, 0), vals.size)
+        if fill:
+            self.buf[self.n_seen:self.n_seen + fill] = vals[:fill]
+            self.n_seen += fill
+            vals = vals[fill:]
+        if vals.size:
+            highs = self.n_seen + 1 + np.arange(vals.size, dtype=np.int64)
+            js = self.rng.integers(highs)
+            hit = js < self.capacity
+            self.buf[js[hit]] = vals[hit]
+            self.n_seen += int(vals.size)
 
     def percentiles(self, qs) -> Dict[str, float]:
         if self.n_seen == 0:
@@ -42,12 +63,15 @@ class _Reservoir:
     def state_dict(self) -> dict:
         """Buffer + RNG bit-generator state: a restored reservoir makes
         the same replacement draws as the uninterrupted one, so resumed
-        percentiles are bitwise-identical."""
-        return {"capacity": self.capacity, "buf": self.buf.copy(),
+        percentiles are bitwise-identical.  ``v=2`` marks the batched
+        draw regime (see :meth:`add`); v-absent (pre-PR-8) states load
+        fine — buffer and RNG state are draw-regime independent."""
+        return {"v": 2, "capacity": self.capacity, "buf": self.buf.copy(),
                 "n_seen": self.n_seen,
                 "rng": self.rng.bit_generator.state}
 
     def load_state_dict(self, d: dict) -> None:
+        d = {k: v for k, v in d.items() if k != "v"}
         if int(d["capacity"]) != self.capacity:
             raise ValueError(
                 f"reservoir checkpoint capacity {d['capacity']} != "

@@ -43,6 +43,7 @@ from repro.core.blockaxis import BlockAxis
 from repro.core.registry import get_round_fn
 from repro.core.scheduler import SchedulerConfig
 from repro.distributed import compat
+from repro.obs.tracing import trace_ys_keys
 from repro.service.server import FlaasService, ServiceConfig, _chunk_metrics
 from repro.service.state import NEVER
 from repro.service.traces import ArrivalTrace
@@ -60,7 +61,8 @@ _DIAG_REPLICATED = ("utility", "analyst_mask", "a_i", "mu_i", "x_analyst",
                     "sp1_violation")
 
 
-def _ys_specs(mode: str, diagnostics: bool) -> Dict[str, P]:
+def _ys_specs(mode: str, diagnostics: bool, trace_level: int = 0,
+              audit: bool = False) -> Dict[str, P]:
     ys = {k: P() for k in _METRIC_KEYS}
     if mode != "wrapfree":
         ys["expired"] = P()
@@ -70,6 +72,14 @@ def _ys_specs(mode: str, diagnostics: bool) -> Dict[str, P]:
     if diagnostics:
         ys.update({k: P() for k in _DIAG_REPLICATED})
         ys.update(_DIAG_SPECS)
+    # decision-trace / audit ys (repro.obs): every value is an analyst- or
+    # pipeline-indexed post-collective aggregate — replicated across the
+    # mesh by construction, so the per-shard registry deltas fold at this
+    # (existing) chunk-boundary gather with no extra collectives.
+    ys.update({k: P() for k in trace_ys_keys(trace_level)})
+    if audit:
+        ys["audit_x"] = P()
+        ys["audit_scale"] = P()
     return ys
 
 
@@ -86,7 +96,8 @@ def _op_specs(mode: str):
 
 @functools.lru_cache(maxsize=64)
 def _sharded_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
-                   mode: str, diagnostics: bool, mesh):
+                   mode: str, diagnostics: bool, mesh,
+                   trace_level: int = 0, audit: bool = False):
     """Compiled shard_map'd analogue of ``server._compiled_chunk``: the
     SAME ``_chunk_metrics`` body, with every block-axis operand passed as
     a local stripe and the cross-shard reductions routed through
@@ -97,13 +108,14 @@ def _sharded_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
     round_fn = get_round_fn(scheduler)
     fn = functools.partial(
         _chunk_metrics, cfg=cfg, round_fn=round_fn, n_ticks=n_ticks,
-        mode=mode, diagnostics=diagnostics, block_axis=BlockAxis(AXIS))
+        mode=mode, diagnostics=diagnostics, trace_level=trace_level,
+        audit=audit, block_axis=BlockAxis(AXIS))
     carry = (P(None, None, AXIS), P(), P(AXIS)) if mode != "wrapfree" \
         else (P(), P(AXIS))
     sm = compat.shard_map(
         fn, mesh=mesh,
         in_specs=(state_specs(), _op_specs(mode)),
-        out_specs=(carry, _ys_specs(mode, diagnostics)),
+        out_specs=(carry, _ys_specs(mode, diagnostics, trace_level, audit)),
         # check_rep/check_vma chokes on collectives under scan/while_loop
         # on older jax; replication of the P() outputs is guaranteed by
         # construction (they are all post-collective values).
@@ -203,7 +215,9 @@ class ShardedFlaasService(FlaasService):
     # -------------------------------------------------------------- chunk
     def _compiled_step(self, n_ticks: int, mode: str):
         step = _sharded_chunk(self.cfg.scheduler, self.cfg.sched, n_ticks,
-                              mode, self.cfg.diagnostics, self.mesh)
+                              mode, self.cfg.diagnostics, self.mesh,
+                              self.cfg.trace_level,
+                              self.cfg.audit_path is not None)
         shardings = tuple(NamedSharding(self.mesh, spec)
                           for spec in _op_specs(mode))
 

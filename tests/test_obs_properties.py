@@ -1,0 +1,139 @@
+"""Hypothesis property tests for the observability plane.
+
+Optional-dep-safe (same pattern as ``test_swap_properties.py``): skips
+itself when ``hypothesis`` is missing, so tier-1 collects and runs
+without it.  Properties:
+
+* registry ``merge`` is commutative and associative for the additive
+  kinds (counters, histograms) — what makes per-shard delta folding
+  order-independent — and cell totals are conserved;
+* histograms conserve observation counts across buckets and merges;
+* the vectorized telemetry reservoir samples only values from the
+  stream, keeps exact ``n_seen`` accounting, and is chunking-invariant:
+  any split of the value stream into batches consumes the same RNG
+  draws, so the final buffer is bitwise identical.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests require hypothesis")
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.obs import MetricsRegistry, render_prometheus
+from repro.service.telemetry import _Reservoir
+
+_NAMES = ("alpha", "beta")
+_LABELS = ((), ("l",))
+
+
+@st.composite
+def _registry(draw):
+    """A small random registry: integer-valued cells keep float addition
+    exact, so merge algebra can be asserted bitwise."""
+    reg = MetricsRegistry()
+    for name, labelnames in zip(_NAMES, _LABELS):
+        kind = draw(st.sampled_from(("counter", "histogram", "gauge")))
+        n_cells = draw(st.integers(0, 3))
+        for i in range(n_cells):
+            labels = (str(i),) if labelnames else ()
+            if kind == "counter":
+                reg.counter("c_" + name, "", labelnames).inc(
+                    draw(st.integers(0, 100)), labels)
+            elif kind == "gauge":
+                reg.gauge("g_" + name, "", labelnames).set(
+                    draw(st.integers(-50, 50)), labels)
+            else:
+                vals = draw(st.lists(st.integers(0, 8), max_size=6))
+                reg.histogram("h_" + name, "", labelnames,
+                              buckets=(1.0, 4.0)).observe_many(
+                    np.asarray(vals, np.float64), labels)
+    return reg
+
+
+def _clone(reg):
+    out = MetricsRegistry()
+    out.load_state_dict(reg.state_dict())
+    return out
+
+
+def _additive_text(reg):
+    """Exposition restricted to the additive families (drop gauges —
+    their last-writer-wins merge is deliberately not commutative)."""
+    return "\n".join(l for l in render_prometheus(reg).splitlines()
+                     if "g_" not in l)
+
+
+@given(st.data())
+def test_merge_commutes_for_additive_kinds(data):
+    a, b = data.draw(_registry()), data.draw(_registry())
+    ab, ba = _clone(a), _clone(b)
+    ab.merge(b)
+    ba.merge(a)
+    assert _additive_text(ab) == _additive_text(ba)
+
+
+@given(st.data())
+def test_merge_is_associative(data):
+    a, b, c = (data.draw(_registry()) for _ in range(3))
+    left = _clone(a)
+    left.merge(b)
+    left.merge(c)
+    bc = _clone(b)
+    bc.merge(c)
+    right = _clone(a)
+    right.merge(bc)
+    # associativity holds for ALL kinds: counters/histograms add,
+    # gauges resolve to the last (rightmost) writer either way
+    assert render_prometheus(left) == render_prometheus(right)
+
+
+@given(st.data())
+def test_merge_conserves_histogram_counts(data):
+    a, b = data.draw(_registry()), data.draw(_registry())
+
+    def totals(reg):
+        out = {}
+        for m in reg.metrics():
+            if m.kind == "histogram":
+                for key, cell in m._cells.items():
+                    out[(m.name, key)] = (int(cell["counts"].sum()),
+                                          cell["n"])
+        return out
+    ta, tb = totals(a), totals(b)
+    merged = _clone(a)
+    merged.merge(b)
+    for key, (counts, n) in totals(merged).items():
+        ea = ta.get(key, (0, 0))
+        eb = tb.get(key, (0, 0))
+        assert counts == n == ea[1] + eb[1]   # every observation counted
+                                              # exactly once, in a bucket
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200),
+       st.integers(0, 2**31 - 1), st.integers(1, 32))
+def test_reservoir_samples_only_stream_values(vals, seed, capacity):
+    r = _Reservoir(capacity, seed=seed)
+    stream = np.asarray(vals, np.float64)
+    r.add(stream)
+    assert r.n_seen == stream.size
+    held = r.buf[:min(capacity, stream.size)]
+    assert set(held.tolist()) <= set(stream.tolist())
+    if stream.size <= capacity:               # fill phase is exact FIFO
+        np.testing.assert_array_equal(held, stream)
+
+
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=150),
+       st.integers(0, 2**31 - 1), st.integers(1, 16),
+       st.lists(st.integers(0, 150), max_size=5))
+def test_reservoir_chunking_invariance(vals, seed, capacity, cuts):
+    stream = np.asarray(vals, np.float64)
+    a = _Reservoir(capacity, seed=seed)
+    a.add(stream)
+    b = _Reservoir(capacity, seed=seed)
+    edges = sorted({min(c, stream.size) for c in cuts})
+    for part in np.split(stream, edges):
+        b.add(part)                           # empty parts are no-ops
+    filled = min(capacity, stream.size)       # tail past n_seen is junk
+    np.testing.assert_array_equal(a.buf[:filled], b.buf[:filled])
+    assert a.n_seen == b.n_seen
