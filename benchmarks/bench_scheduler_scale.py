@@ -155,10 +155,30 @@ def sp2_swap() -> list:
             rounds_per_s=round(n_rounds / (us_i * 1e-6), 2),
             reference_rounds_per_s=round(n_rounds / (us_r * 1e-6), 2),
             parity=int(parity))))
+        # fleet-scale acceptance row: N = 1000 pipelines over B = 100k
+        # blocks, budget-scarce (capacity = 0.25, ~10% demand density) —
+        # the regime where the certified beam pays: the infeasibility
+        # screen kills almost every swap, the beam exactly evaluates the
+        # few survivors, and the certificate closes without the O(N^2/4)
+        # compacted sweep.  NOT in --smoke / BENCH_SMALL: the demand
+        # tensor alone is [1, 1000, 100000] f32 = 400 MB.
+        rnd = _round(1, 100_000, 1000, cap=0.25)
+        cfg_beam = dataclasses.replace(cfg_inc, swap_beam=8)
+        cfg_off = dataclasses.replace(cfg_inc, refine=False)
+        res = schedule_round(rnd, cfg_beam)
+        us_b = time_fn(lambda r: schedule_round(r, cfg_beam), rnd, iters=2)
+        us_o = time_fn(lambda r: schedule_round(r, cfg_off), rnd, iters=2)
+        rows.append(("sp2_swap/round_N1000_B100k", us_b, derived(
+            pipelines=1000, blocks=100_000,
+            cert_ok=int(bool(res.swap_cert_ok)),
+            candidates_full=swap_candidate_cap(1000), beam=8,
+            no_refine_us=round(us_o, 1),
+            refine_overhead=round(us_b / us_o, 2),
+            seconds=round(us_b * 1e-6, 2))))
     return rows
 
 
-def _round(M, K, N, seed=0):
+def _round(M, K, N, seed=0, cap=1.0):
     rng = np.random.default_rng(seed)
     demand = (rng.uniform(0, 0.05, (M, N, K)) *
               (rng.random((M, N, K)) > 0.9)).astype(np.float32)
@@ -167,7 +187,7 @@ def _round(M, K, N, seed=0):
         active=jnp.asarray(demand.sum(-1) > 0),
         arrival=jnp.zeros((M, N), jnp.float32),
         loss=jnp.ones((M, N), jnp.float32),
-        capacity=jnp.ones(K, jnp.float32),
+        capacity=jnp.full((K,), cap, jnp.float32),
         budget_total=jnp.ones(K, jnp.float32), now=jnp.asarray(0.0))
 
 

@@ -71,6 +71,40 @@ def smoke() -> tuple:
               file=sys.stderr)
         failures += 1
 
+    # sp2_pruned_parity smoke: the certified pruning beam vs the full
+    # compacted sweep on a small round — selections and allocations must
+    # be BITWISE equal whichever way the certificate goes (that is the
+    # all-or-nothing fallback contract); the candidate-reduction factor
+    # (compacted cap / beam width) is what the fleet rows cash in.
+    try:
+        import dataclasses
+
+        import numpy as np
+
+        from repro.core import schedule_round, swap_candidate_cap
+
+        from .bench_scheduler_scale import _round
+        rnd = _round(3, 64, 8)
+        beam = 4
+        cfg_beam = dataclasses.replace(cfg, swap_beam=beam)
+        a, b = schedule_round(rnd, cfg_beam), schedule_round(rnd, cfg)
+        if not (np.array_equal(np.asarray(a.selected), np.asarray(b.selected))
+                and np.array_equal(np.asarray(a.x_pipeline),
+                                   np.asarray(b.x_pipeline))):
+            raise AssertionError("pruned swap parity violated")
+        us_p = time_fn(lambda r: schedule_round(r, cfg_beam), rnd, iters=2)
+        us_f = time_fn(lambda r: schedule_round(r, cfg), rnd, iters=2)
+        rows.append(("smoke/sp2_pruned_parity", us_p, derived(
+            full_us=round(us_f, 1), parity=1,
+            cert_ok=int(bool(a.swap_cert_ok)),
+            candidate_reduction=round(swap_candidate_cap(
+                rnd.demand.shape[1]) / beam, 1))))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/sp2_pruned_parity,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
     # service_throughput smoke: a short streaming run with recycling +
     # ledger-ring wrap on the smallest legal ring.
     try:

@@ -8,9 +8,12 @@ from .utility import (alpha_fair_objective, analyst_utility, default_lambda,
                       platform_utility)
 from .waterfill import WaterfillResult, alpha_fair_waterfill
 from .packing import (PackResult, exact_pack, greedy_cover, pack_all,
-                      pack_analyst, swap_refine, swap_refine_reference)
-from .swap import (swap_candidate_cap, swap_candidate_objectives,
-                   swap_candidates, swap_refine_incremental)
+                      pack_all_pruned, pack_analyst, swap_refine,
+                      swap_refine_reference)
+from .swap import (swap_batch_objectives, swap_candidate_cap,
+                   swap_candidate_objectives, swap_candidates,
+                   swap_prune_bounds, swap_refine_beam,
+                   swap_refine_incremental)
 from .scheduler import RoundResult, SchedulerConfig, schedule_round
 from .baselines import dpf_round, dpk_round, fcfs_round
 from .registry import (SCHEDULER_NAMES, SCHEDULERS, get_round_fn,
@@ -29,8 +32,11 @@ __all__ = [
     "analyst_utility", "default_lambda", "dominant_efficiency",
     "dominant_fairness", "jain_index", "platform_utility", "WaterfillResult",
     "alpha_fair_waterfill", "PackResult", "exact_pack", "greedy_cover",
-    "pack_all", "pack_analyst", "swap_refine", "swap_refine_reference",
-    "swap_candidate_cap", "swap_candidate_objectives", "swap_candidates",
+    "pack_all", "pack_all_pruned", "pack_analyst", "swap_refine",
+    "swap_refine_reference",
+    "swap_batch_objectives", "swap_candidate_cap",
+    "swap_candidate_objectives", "swap_candidates", "swap_prune_bounds",
+    "swap_refine_beam",
     "swap_refine_incremental", "RoundResult", "SchedulerConfig",
     "schedule_round", "dpf_round", "dpk_round", "fcfs_round",
     "SCHEDULER_NAMES", "SCHEDULERS", "get_round_fn", "get_scheduler",

@@ -283,7 +283,15 @@ def run_episode(episode: Episode, sched_cfg: SchedulerConfig,
 #     the time goes.
 #   gpu / tpu — no collected report yet: they fall back to vmap (lockstep
 #     batching is the accelerator-native layout); replace the fallback
-#     with a table entry once a report from real hardware exists.
+#     with a table entry once a report from real hardware exists.  Note
+#     the certified swap beam changes what a fleet round costs there: the
+#     2026-08-07 sp2_pruned report (benchmarks/history/) shows a
+#     budget-scarce N=1000 x B=100k dpbalance round closing in 5.8s on
+#     one CPU host with the O(N^2/4) sweep provably skipped, and the
+#     beam's candidate evaluator is the Pallas-tiled kernel (interpret
+#     mode on CPU, compiled on real accelerators) — so re-measure BOTH
+#     fleet modes with swap_beam > 0 before writing the gpu/tpu entries;
+#     the map-vs-vmap tradeoff above was collected beam-off.
 _FLEET_MODE_DEFAULT = {"cpu": "map"}
 _FLEET_MODE_FALLBACK = "vmap"
 

@@ -106,3 +106,32 @@ def boost_scan(g_ord: jax.Array, sel_ord: jax.Array, leftover: jax.Array,
         return left - extra * dem, extra
 
     return jax.lax.scan(step, leftover, (g_ord, sel_ord))
+
+
+def swap_eval(g_ord: jax.Array, sel_c: jax.Array, leftover_c: jax.Array,
+              kappa_max: float, use_pallas: bool = False,
+              block_axis=None, tile: int = 128):
+    """Boost sweeps for a ``[C, N]`` stack of swap candidates at once.
+
+    ``g_ord [N, K]`` are the shared visit-ordered demand rows, ``sel_c``
+    the candidate selections in visit order, ``leftover_c [C, K]`` each
+    candidate's initial leftover.  Returns ``extras [C, N]``.
+
+    ``use_pallas`` streams the candidate axis through the tiled kernel
+    (:func:`repro.kernels.budget_alloc.swap_eval`): each VMEM tile of
+    candidates shares one load of every demand row instead of re-streaming
+    ``g_ord`` per candidate as the vmapped single-candidate kernel does.
+    Same local-block-axis restriction as :func:`boost_scan` — on a sharded
+    mesh every visit step's water level is a cross-shard ``pmin``, so
+    sharded callers keep the batched jnp scan."""
+    if use_pallas and (block_axis is None or not block_axis.sharded):
+        from repro.kernels.budget_alloc import swap_eval as swap_kernel
+        return swap_kernel(g_ord, sel_c, leftover_c, kappa_max=kappa_max,
+                           tile=tile, interpret=_interpret())
+
+    def one(sel_row, left):
+        _, extras = boost_scan(g_ord, sel_row, left, kappa_max, False,
+                               block_axis)
+        return extras
+
+    return jax.vmap(one)(sel_c, leftover_c)

@@ -155,6 +155,24 @@ def swap_refine(gamma, mu, a, active, sel, budget, kappa_max: float,
               use_pallas)
 
 
+def _finish_analyst(gamma, mu, a, active, sel0, sel, budget, kappa_max,
+                    block_axis: BlockAxis = LOCAL,
+                    use_pallas: bool = False) -> PackResult:
+    """Shared SP2 tail: boost the final selection and assemble the
+    PackResult.  Split out so the certified-pruning path can run it on a
+    beam-refined (or fallback-refined) selection with operation-for-
+    operation the arithmetic of :func:`pack_analyst`."""
+    swapped = jnp.any(sel != sel0)
+    x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget,
+                                      kappa_max, block_axis, use_pallas)
+    # SP2 boost water level: the binding leftover share after the kappa
+    # sweep (what the next boost step would have had to fit under).  Only
+    # consumed by decision tracing; dead code (DCE'd) otherwise.
+    water = block_axis.min(jnp.min(budget - used))
+    return PackResult(x_ij=x, selected=sel, used=used, objective=obj,
+                      swapped=swapped, water=water)
+
+
 @functools.partial(jax.jit, static_argnames=("kappa_max", "refine",
                                              "incremental", "block_axis",
                                              "use_pallas"))
@@ -167,22 +185,62 @@ def pack_analyst(gamma, mu, a, active, budget, kappa_max: float = 8.0,
     if refine:
         sel = swap_refine(gamma, mu, a, active, sel0, budget, kappa_max,
                           block_axis, incremental, use_pallas)
-        swapped = jnp.any(sel != sel0)
     else:
-        sel, swapped = sel0, jnp.zeros((), bool)
-    x, used, obj = proportional_boost(gamma, mu, a, active, sel, budget,
-                                      kappa_max, block_axis, use_pallas)
-    # SP2 boost water level: the binding leftover share after the kappa
-    # sweep (what the next boost step would have had to fit under).  Only
-    # consumed by decision tracing; dead code (DCE'd) otherwise.
-    water = block_axis.min(jnp.min(budget - used))
-    return PackResult(x_ij=x, selected=sel, used=used, objective=obj,
-                      swapped=swapped, water=water)
+        sel = sel0
+    return _finish_analyst(gamma, mu, a, active, sel0, sel, budget,
+                           kappa_max, block_axis, use_pallas)
 
 
 pack_all = jax.vmap(pack_analyst,
                     in_axes=(0, 0, 0, 0, 0, None, None, None, None, None),
                     out_axes=0)
+
+
+@functools.partial(jax.jit, static_argnames=("kappa_max", "swap_beam",
+                                             "block_axis", "use_pallas"))
+def pack_all_pruned(gamma, mu, a, active, budget, kappa_max: float = 8.0,
+                    swap_beam: int = 8, block_axis: BlockAxis = LOCAL,
+                    use_pallas: bool = False):
+    """Batched SP2 with the certified candidate-pruning beam.
+
+    Runs the top-``swap_beam`` beam (:func:`repro.core.swap.
+    swap_refine_beam`) for every analyst and checks the per-round
+    exactness certificate.  The fallback is hoisted ABOVE the analyst
+    vmap as a real ``lax.cond``: inside a vmapped body a data-dependent
+    branch lowers to a select that executes both sides, which would spend
+    the full O(N^2/4) sweep every round and defeat the pruning.  Out here
+    the predicate is a replicated scalar (all per-analyst verdicts AND-ed;
+    on a sharded mesh every quantity feeding it is post-collective), so
+    certified rounds never touch the full grid and uncertified rounds
+    rerun the whole round through the exact compacted sweep — all-or-
+    nothing, bit-identical to :func:`pack_all` either way.
+
+    Returns ``(PackResult [M, ...], cert_ok scalar bool, margin scalar)``
+    — margin is the tightest per-analyst certificate margin (see
+    ``swap_refine_beam``), the level-2 trace observable."""
+    sel0 = jax.vmap(greedy_cover, in_axes=(0, 0, 0, 0, None))(
+        gamma, mu, active, budget, block_axis)
+    sel_beam, ok, margin = jax.vmap(
+        lambda g, m, aa, ac, s0, b: _swap.swap_refine_beam(
+            g, m, aa, ac, s0, b, kappa_max, swap_beam, block_axis,
+            use_pallas))(gamma, mu, a, active, sel0, budget)
+    cert_ok = jnp.all(ok)
+    finish = jax.vmap(
+        lambda g, m, aa, ac, s0, s, b: _finish_analyst(
+            g, m, aa, ac, s0, s, b, kappa_max, block_axis, use_pallas))
+
+    def certified(_):
+        return finish(gamma, mu, a, active, sel0, sel_beam, budget)
+
+    def fallback(_):
+        sel_full = jax.vmap(
+            lambda g, m, aa, ac, s0, b: _swap.swap_refine_incremental(
+                g, m, aa, ac, s0, b, kappa_max, block_axis, use_pallas))(
+            gamma, mu, a, active, sel0, budget)
+        return finish(gamma, mu, a, active, sel0, sel_full, budget)
+
+    pack = jax.lax.cond(cert_ok, certified, fallback, None)
+    return pack, cert_ok, jnp.min(margin)
 
 
 @functools.partial(jax.jit, static_argnames=("kappa_max",))

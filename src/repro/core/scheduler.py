@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from . import demand as dm
 from . import utility as ut
 from .blockaxis import LOCAL, BlockAxis
-from .packing import pack_all
+from .packing import pack_all, pack_all_pruned
 from .waterfill import alpha_fair_waterfill
 
 _EPS = 1e-9
@@ -45,6 +45,13 @@ class SchedulerConfig:
     solver_tol: float = 1e-6
     use_pallas: bool = False        # [M,K] hot-path sweeps via Pallas kernels
                                     # (compiled on TPU, interpret elsewhere)
+    swap_beam: int = 0              # >0: certified top-k pruning of the SP2
+                                    # swap sweep (core/swap.py) — evaluate
+                                    # only the `swap_beam` best-bounded
+                                    # candidates, fall back to the full
+                                    # compacted sweep when the exactness
+                                    # certificate fails.  0 (default) keeps
+                                    # the full sweep, bitwise as before.
 
     def effective_lambda(self) -> float:
         return ut.default_lambda(self.beta) if self.lam is None else self.lam
@@ -76,6 +83,9 @@ class RoundResult(NamedTuple):
     sp2_water: jax.Array | None = None      # [M] post-boost min leftover
     swap_accepted: jax.Array | None = None  # [M] bool: swap refine fired
     grant_scale: jax.Array | None = None    # scalar overdraw-guard scale
+    # --- certified swap pruning (PR 9) ---------------------------------
+    swap_cert_ok: jax.Array | None = None      # scalar bool: beam certified
+    swap_cert_margin: jax.Array | None = None  # scalar: tightest margin
 
 
 def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
@@ -114,9 +124,15 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
     # a_ij = T(t_ij) l_ij.
     T_ij = dm.waiting_coefficient(rnd.arrival, rnd.now, cfg.tau)
     a_ij = T_ij * rnd.loss
-    pack = pack_all(gamma, mu_ij, a_ij, active, budget_i,
-                    cfg.kappa_max, cfg.refine, cfg.incremental_swap,
-                    block_axis, cfg.use_pallas)
+    if cfg.swap_beam > 0 and cfg.refine and cfg.incremental_swap:
+        pack, cert_ok, cert_margin = pack_all_pruned(
+            gamma, mu_ij, a_ij, active, budget_i, cfg.kappa_max,
+            cfg.swap_beam, block_axis, cfg.use_pallas)
+    else:
+        pack = pack_all(gamma, mu_ij, a_ij, active, budget_i,
+                        cfg.kappa_max, cfg.refine, cfg.incremental_swap,
+                        block_axis, cfg.use_pallas)
+        cert_ok = cert_margin = None
 
     x_ij = pack.x_ij
     grants = rnd.demand * x_ij[..., None]             # epsilon units
@@ -144,7 +160,8 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
         sp1_violation=sp1.violation,
         sp1_iters=sp1.iters, mu_real=mu_real, sp2_objective=pack.objective,
         sp2_water=pack.water, swap_accepted=pack.swapped,
-        grant_scale=grant_scale)
+        grant_scale=grant_scale,
+        swap_cert_ok=cert_ok, swap_cert_margin=cert_margin)
 
 
 @functools.lru_cache(maxsize=32)

@@ -50,6 +50,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import hotpath
 # Module (not name) import: packing imports this module at its own top,
 # so attribute lookup must happen at call time, after packing finishes
 # initializing.
@@ -57,6 +58,26 @@ from . import packing
 from .blockaxis import LOCAL, BlockAxis
 
 _BIG = 1e30
+# Pruning-bound constants: demand liveness threshold (must match the boost
+# scan's eps so "no live block -> kappa-capped" agrees with the exact
+# sweep) and the certificate's relative safety margin against float32
+# accumulation error (sums over up to N terms; ~N * eps_f32 of headroom).
+_PRUNE_EPS = 1e-9
+_CERT_RTOL = 2e-4
+# Headroom for the definitely-infeasible screen: the screen tests the
+# algebraic form ``base_used - gamma_s + gamma_u`` of a candidate's usage,
+# while the exact sweep re-sums over the selection; the two differ by f32
+# reassociation noise (<< 1e-3 on normalized shares), so only violations
+# clearing this slack are treated as certainly infeasible.
+_SCREEN_ATOL = 1e-3
+# Witness blocks per swapped-in row for the infeasibility screen.  A single
+# witness leaks whenever the swapped-out row covers it; eight independent
+# witnesses make a leak (an infeasible candidate whose bound stays finite)
+# vanishingly rare at realistic demand densities.
+_SCREEN_WITNESSES = 8
+# Candidate-chunk residency cap for swap_batch_objectives (f32 elements of
+# the [chunk, N, K] feasibility broadcast — 2^28 elements = 1 GB).
+_CHUNK_ELEMS = 2 ** 28
 
 
 def swap_candidate_cap(n: int) -> int:
@@ -99,18 +120,72 @@ def swap_candidate_objectives(gamma, mu, a, active, sel, budget,
     masked to ``-_BIG``.
     """
     s_c, u_c, valid_c = swap_candidates(sel, active)
-
-    def evaluate(s, u):
-        cand = sel.at[s].set(False).at[u].set(True)
-        used = jnp.sum(gamma * cand[:, None], axis=0)
-        feasible = block_axis.all(jnp.all(used <= budget + packing._FEAS))
-        _, _, obj = packing.proportional_boost(gamma, mu, a, active, cand,
-                                               budget, kappa_max, block_axis,
-                                               use_pallas)
-        return cand, obj, feasible
-
-    cands, objs, feas = jax.vmap(evaluate)(s_c, u_c)
+    cands = jax.vmap(
+        lambda s, u: sel.at[s].set(False).at[u].set(True))(s_c, u_c)
+    objs, feas = swap_batch_objectives(gamma, mu, a, cands, budget,
+                                       kappa_max, block_axis, use_pallas)
     return cands, jnp.where(valid_c & feas, objs, -_BIG), valid_c & feas
+
+
+def swap_batch_objectives(gamma, mu, a, cands, budget, kappa_max: float,
+                          block_axis: BlockAxis = LOCAL,
+                          use_pallas: bool = False, chunk: int = 4096):
+    """Evaluate a ``[C, N]`` stack of candidate selections.
+
+    Returns ``(objs [C], feas [C])`` with the exact per-candidate
+    arithmetic of a vmapped :func:`~repro.core.packing.proportional_boost`
+    recompute — same feasibility sum, same boost sweep, same canonical
+    pipeline-order objective reduction — so the values are bit-identical
+    whether a candidate reaches this through the full compacted sweep or
+    through the pruned beam.  The only structural difference from the
+    per-candidate vmap is that the boost sweeps dispatch through
+    :func:`repro.core.hotpath.swap_eval`, which (``use_pallas``) streams
+    the whole candidate stack through the tiled VMEM kernel instead of
+    batching one kernel instance per candidate.
+
+    Stacks larger than ``chunk`` are processed as a sequential ``lax.map``
+    over chunk-sized slabs (zero-padded tail, sliced off afterwards).
+    Every candidate's arithmetic is independent of its batch neighbours,
+    so chunking cannot change a single bit — what it changes is the
+    PROGRAM's peak residency: the full compacted sweep at fleet scale
+    (C = N^2/4 candidates x K blocks) would otherwise bake a
+    candidates-by-blocks buffer into the compiled round, which at
+    N=1000 / K=100k is ~100 TB — the certified-pruning fallback branch
+    must exist in the program even on rounds that never execute it."""
+    C = cands.shape[0]
+    if chunk:
+        # The batched feasibility sum broadcasts gamma against the chunk
+        # ([chunk, N, K] temp on backends that materialize it); cap the
+        # chunk so that stays ~1 GB regardless of problem size.
+        cap = max(1, _CHUNK_ELEMS // max(cands.shape[1] * gamma.shape[-1], 1))
+        chunk = max(1, min(int(chunk), cap))
+    if chunk and C > chunk:
+        pad = (-C) % chunk
+        cp = cands
+        if pad:
+            cp = jnp.concatenate(
+                [cands, jnp.zeros((pad,) + cands.shape[1:], cands.dtype)])
+        cp = cp.reshape(-1, chunk, cands.shape[1])
+        objs, feas = jax.lax.map(
+            lambda cc: swap_batch_objectives(gamma, mu, a, cc, budget,
+                                             kappa_max, block_axis,
+                                             use_pallas, chunk=0), cp)
+        return objs.reshape(-1)[:C], feas.reshape(-1)[:C]
+    used = jax.vmap(lambda c: jnp.sum(gamma * c[:, None], axis=0))(cands)
+    feas = jax.vmap(
+        lambda u: block_axis.all(jnp.all(u <= budget + packing._FEAS)))(used)
+    leftover = jax.vmap(lambda u: budget - u)(used)
+    order = jnp.argsort(-(mu * a))          # fixed: selection-independent
+    extras = hotpath.swap_eval(gamma[order], cands[:, order], leftover,
+                               kappa_max, use_pallas, block_axis)
+
+    def finish(cand, ex):
+        x = jnp.zeros_like(mu).at[order].set(ex)
+        x = jnp.where(cand, 1.0 + x, 0.0)
+        return jnp.sum(mu * a * x * cand)
+
+    objs = jax.vmap(finish)(cands, extras)
+    return objs, feas
 
 
 def swap_refine_incremental(gamma, mu, a, active, sel, budget,
@@ -131,3 +206,155 @@ def swap_refine_incremental(gamma, mu, a, active, sel, budget,
     best = jnp.argmax(objs)
     improved = objs[best] > base_obj + 1e-12
     return jnp.where(improved, cands[best], sel)
+
+
+def swap_prune_bounds(gamma, mu, a, sel, budget, kappa_max: float,
+                      s_c, u_c, valid_c, block_axis: BlockAxis = LOCAL):
+    """O(1)-per-candidate objective upper bound for the compacted grid.
+
+    For candidate c = sel - {s} + {u} the boosted objective is
+    ``sum_{j in c} w_j (1 + extra_j(c))`` with ``w_j = mu_j a_j``.  Two
+    monotonicity facts give a sound bound without running any boost scan:
+
+    * the scan's leftover only ever shrinks, so every boost is bounded by
+      its value against the candidate's INITIAL leftover
+      ``L_c = L0 + gamma_s - gamma_u <= L0 + gamma_s`` (componentwise;
+      ``L0`` is the base selection's leftover), and
+    * ``min_k`` of the water ratios is bounded by the ratio at any single
+      block — we use ``k*_j``, the base residual's binding block for row j
+      (argmin of ``L0_k / gamma_jk`` over live blocks).
+
+    Hence ``extra_j(c) <= e_ub[s, j] = clip(rho0_j +
+    gamma[s, k*_j] / gamma[j, k*_j], 0, kappa_max - 1)`` — rows with no
+    live block get the exact kappa cap, matching the inf-water semantics
+    of the scan.  Each candidate's bound is then the base total plus the
+    swapped-in/out row corrections and the precomputed boost row-sum:
+
+        ub(s, u) = T - w_s + w_u + rowB[s]
+                   - relu(w_s) e_ub[s, s] + relu(w_u) e_ub[s, u]
+
+    (relu(w) keeps the bound sound even for non-positive weights, where a
+    boost can only lower the contribution).  Infeasible candidates are
+    masked to ``-_BIG`` by the caller, which any finite ub dominates — but
+    to keep them from hogging the beam, candidates that are DEFINITELY
+    infeasible get their ub forced down to ``-_BIG``: a candidate provably
+    violates capacity when, at the swapped-in row's tightest block
+    ``k†_u = argmax_k (gamma_uk - L0_k)``, the demand it adds exceeds the
+    leftover plus whatever the removed row frees there by more than
+    ``_FEAS + _SCREEN_ATOL``.  Exhibiting one violating block is sound
+    (the exact sweep masks that candidate to ``-_BIG`` too); near-boundary
+    candidates stay unscreened and are handled by the beam's exact
+    evaluation.  Cost: two O(NK) sweeps + [N, N] gathers + a matvec —
+    nothing per candidate.
+
+    Sharded: every K-indexed quantity is the local stripe's, and a bound
+    built from local blocks only is still a valid global bound (``k*`` is
+    just one particular block; stripes with no live block fall back to the
+    kappa cap), so the per-shard ubs are combined with ``block_axis.min``
+    — replicated AND the tightest available.  Returns ``ub [C]`` with
+    invalid slots at ``-inf``."""
+    w = mu * a
+    wp = jnp.maximum(w, 0.0)
+    base_used = jnp.sum(gamma * sel[:, None], axis=0)
+    L0 = budget - base_used                                       # [K]
+    live = gamma > _PRUNE_EPS
+    ratio0 = jnp.where(live, L0[None, :] / jnp.maximum(gamma, _PRUNE_EPS),
+                       jnp.inf)                                   # [N, K]
+    kstar = jnp.argmin(ratio0, axis=1)                            # [N]
+    rho0 = jnp.take_along_axis(ratio0, kstar[:, None], axis=1)[:, 0]
+    d = jnp.take_along_axis(gamma, kstar[:, None], axis=1)[:, 0]
+    G = gamma[:, kstar]                     # G[s, j] = gamma[s, k*_j]
+    e_ub = jnp.clip(rho0[None, :] + G / jnp.maximum(d[None, :], _PRUNE_EPS),
+                    0.0, kappa_max - 1.0)                         # [N(s), N(j)]
+    rowB = e_ub @ jnp.where(sel, wp, 0.0)                         # [N]
+    e_diag = jnp.diagonal(e_ub)
+    T = jnp.sum(jnp.where(sel, w, 0.0))
+    ub = (T - w[s_c] + w[u_c] + rowB[s_c]
+          - wp[s_c] * e_diag[s_c] + wp[u_c] * e_ub[s_c, u_c])
+    # definitely-infeasible screen at the swapped-in row's tightest blocks.
+    # One witness block (the single argmax of gamma_u - L0) misses exactly
+    # the candidates where the swapped-out row happens to cover that block
+    # — at fleet density a handful of such leaks fill the whole beam with
+    # infeasible candidates and force the fallback.  Screening against the
+    # top-_SCREEN_WITNESSES violating blocks per u closes that: a candidate
+    # is certainly infeasible if ANY witness block's added demand exceeds
+    # the leftover plus what the removed row frees there.
+    J = min(_SCREEN_WITNESSES, gamma.shape[-1])
+    gapv, kdag = jax.lax.top_k(gamma - L0[None, :], J)             # [N, J]
+    G2 = gamma[:, kdag]                  # G2[s, u, j] = gamma[s, k†_{u,j}]
+    viol_su = jnp.any(gapv[None, :, :] - G2
+                      > packing._FEAS + _SCREEN_ATOL, axis=-1)     # [N, N]
+    ub = jnp.where(viol_su[s_c, u_c], -_BIG, ub)
+    ub = jnp.where(valid_c, ub, -jnp.inf)
+    return block_axis.min(ub)
+
+
+def swap_refine_beam(gamma, mu, a, active, sel, budget, kappa_max: float,
+                     beam: int, block_axis: BlockAxis = LOCAL,
+                     use_pallas: bool = False):
+    """Certified top-k beam over the compacted candidate grid.
+
+    Evaluates only the ``beam`` candidates with the largest pruning bounds
+    (exact arithmetic, via :func:`swap_batch_objectives`) and checks the
+    exactness certificate: the largest bound among PRUNED candidates must
+    sit strictly below ``max(best_obj, base_obj + 1e-12)`` — with
+    :data:`_CERT_RTOL` relative headroom against float32 accumulation
+    noise.  When it holds, no pruned candidate can either beat the beam's
+    surviving argmax or clear the acceptance threshold the full sweep
+    applies, so the refined selection AND the s-major first-maximum tie
+    resolution are bit-identical to the full compacted sweep.  When it
+    fails the caller must fall back to the full sweep
+    (:func:`swap_refine_incremental`); this function only reports the
+    verdict.
+
+    ``lax.top_k`` resolves bound ties to the lowest index, i.e. the
+    earliest candidate in s-major order, so tied-at-the-boundary beams
+    keep the candidate the full sweep's argmax would prefer.  The beam is
+    re-sorted to s-major order before evaluation for the same reason.
+
+    Returns ``(sel_new, cert_ok, margin)`` — margin is the certificate
+    threshold minus ``max_pruned_ub`` (``+inf`` when nothing was pruned),
+    the observable the near-tie tests stress."""
+    s_c, u_c, valid_c = swap_candidates(sel, active)
+    C = s_c.shape[0]
+    W = max(1, min(int(beam), C))
+    ub = swap_prune_bounds(gamma, mu, a, sel, budget, kappa_max,
+                           s_c, u_c, valid_c, block_axis)
+    k = min(W + 1, C)
+    top_ub, top_idx = jax.lax.top_k(ub, k)
+    if k > W:
+        beam_idx, pruned_ub = top_idx[:W], top_ub[W]
+    else:                       # beam covers the whole grid: nothing pruned
+        beam_idx = top_idx
+        pruned_ub = jnp.asarray(-jnp.inf, ub.dtype)
+    beam_idx = jnp.sort(beam_idx)           # restore s-major order
+    s_b, u_b, valid_b = s_c[beam_idx], u_c[beam_idx], valid_c[beam_idx]
+    cands_b = jax.vmap(
+        lambda s, u: sel.at[s].set(False).at[u].set(True))(s_b, u_b)
+    objs_b, feas_b = swap_batch_objectives(gamma, mu, a, cands_b, budget,
+                                           kappa_max, block_axis, use_pallas)
+    objs_b = jnp.where(valid_b & feas_b, objs_b, -_BIG)
+    best = jnp.argmax(objs_b)
+    best_obj = objs_b[best]
+    _, _, base_obj = packing.proportional_boost(
+        gamma, mu, a, active, sel, budget, kappa_max, block_axis, use_pallas)
+    # Certificate threshold: a pruned candidate can only change the outcome
+    # if its true objective clears BOTH the beam's surviving best and the
+    # acceptance threshold ``base_obj + 1e-12`` — below the latter the full
+    # sweep keeps the base selection no matter which candidate its argmax
+    # lands on.  Certifying against the max of the two is what lets tight-
+    # budget rounds (every candidate infeasible, ``best_obj = -_BIG``)
+    # certify instead of falling back: the screen floors the pruned bounds
+    # to ``-_BIG`` and the base objective (always >= 0) dominates them.
+    thresh = jnp.maximum(best_obj, base_obj + 1e-12)
+    pad = _CERT_RTOL * (1.0 + jnp.abs(thresh))
+    # Second clause: when the beam's best AND every pruned candidate sit at
+    # the infeasible floor, no candidate can clear the improvement
+    # threshold in either sweep (base objectives are finite), so the
+    # unchanged selection is certified even without strict separation.
+    cert_ok = (pruned_ub + pad < thresh) | (
+        (pruned_ub <= -_BIG) & (best_obj <= -_BIG))
+    margin = thresh - pruned_ub
+    improved = best_obj > base_obj + 1e-12
+    sel_new = jnp.where(improved, cands_b[best], sel)
+    return sel_new, cert_ok, margin

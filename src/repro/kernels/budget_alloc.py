@@ -150,3 +150,81 @@ def boost_scan(g_ord, sel_ord, leftover, *, kappa_max: float,
         interpret=interpret,
     )(g_ord, sel_ord.astype(jnp.int32)[None, :], leftover[None, :])
     return extras[0], left[0]
+
+
+def _swap_eval_kernel(g_ref, sel_ref, left_ref, extras_ref, left_scr, *,
+                      kappa_max: float):
+    """Boost sweeps for one VMEM tile of swap candidates.
+
+    Each grid step owns ``tile`` candidates: their leftover vectors sit in
+    a ``[tile, K]`` scratch block for the whole sweep, and every one of the
+    N visit steps loads the shared demand row ONCE and applies it to the
+    entire tile — the row reuse the per-candidate vmap of
+    :func:`boost_scan` cannot express (there each batch element re-streams
+    ``g_ord``).  Arithmetic per candidate is operation-for-operation the
+    single-candidate kernel's: same masked divide, same min-reduce over K,
+    same clip and debit, so extras are bit-identical to
+    :func:`repro.kernels.ref.swap_eval_ref`."""
+    left_scr[...] = left_ref[...]
+    extras_ref[...] = jnp.zeros_like(extras_ref)
+    n = g_ref.shape[0]
+
+    def step(j, carry):
+        dem = pl.load(g_ref, (pl.dslice(j, 1), slice(None)))     # [1, K]
+        left = left_scr[...]                                     # [tile, K]
+        ratio = jnp.where(dem > _BOOST_EPS,
+                          left / jnp.maximum(dem, _BOOST_EPS), jnp.inf)
+        extra = jnp.clip(jnp.min(ratio, axis=1, keepdims=True),
+                         0.0, kappa_max - 1.0)                   # [tile, 1]
+        is_sel = pl.load(sel_ref, (slice(None), pl.dslice(j, 1)))  # [tile, 1]
+        extra = jnp.where(is_sel != 0, extra, 0.0)
+        left_scr[...] = left - extra * dem
+        # lane-select store (TPU-friendly: no scalar scatter)
+        idx = jax.lax.broadcasted_iota(jnp.int32, extras_ref.shape, 1)
+        extras_ref[...] = jnp.where(idx == j, extra, extras_ref[...])
+        return carry
+
+    jax.lax.fori_loop(0, n, step, 0)
+
+
+def swap_eval(g_ord, sel_c, leftover_c, *, kappa_max: float, tile: int = 128,
+              interpret: bool = False):
+    """Tiled SP2 candidate evaluator: boost sweeps for a whole candidate
+    stack.  ``g_ord [N, K]`` (visit-ordered demand rows, shared),
+    ``sel_c [C, N]`` candidate selections (visit order), ``leftover_c
+    [C, K]`` per-candidate initial leftovers -> ``extras [C, N]``.
+
+    The candidate axis is streamed through the kernel in ``tile``-sized
+    VMEM blocks (grid = ceil(C / tile); non-divisor tails are zero-padded
+    and slid off afterwards — a padded candidate selects nothing, so its
+    lane is all-zero by construction).  Objectives and the swap argmax are
+    formed by the caller from the extras in the canonical pipeline-order
+    arithmetic, which is what keeps tie resolution bit-identical to the
+    unfused sweep."""
+    import functools
+
+    C, N = sel_c.shape
+    K = g_ord.shape[1]
+    t = max(1, min(int(tile), C))
+    pad = (-C) % t
+    sel_i = sel_c.astype(jnp.int32)
+    left = leftover_c.astype(jnp.float32)
+    if pad:
+        sel_i = jnp.concatenate(
+            [sel_i, jnp.zeros((pad, N), jnp.int32)], axis=0)
+        left = jnp.concatenate(
+            [left, jnp.zeros((pad, K), jnp.float32)], axis=0)
+    extras = pl.pallas_call(
+        functools.partial(_swap_eval_kernel, kappa_max=float(kappa_max)),
+        grid=((C + pad) // t,),
+        in_specs=[
+            pl.BlockSpec((N, K), lambda i: (0, 0)),
+            pl.BlockSpec((t, N), lambda i: (i, 0)),
+            pl.BlockSpec((t, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((C + pad, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((t, K), jnp.float32)],
+        interpret=interpret,
+    )(g_ord, sel_i, left)
+    return extras[:C]

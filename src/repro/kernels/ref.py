@@ -99,3 +99,15 @@ def boost_scan_ref(g_ord, sel_ord, leftover, kappa_max):
     left, extras = jax.lax.scan(step, leftover.astype(jnp.float32),
                                 (g_ord.astype(jnp.float32), sel_ord))
     return extras, left
+
+
+def swap_eval_ref(g_ord, sel_c, leftover_c, kappa_max):
+    """Tiled swap-candidate evaluator contract: one boost sweep per
+    candidate row.  ``g_ord [N,K]`` shared visit-ordered demand rows,
+    ``sel_c [C,N]`` candidate selections, ``leftover_c [C,K]`` initial
+    leftovers -> extras ``[C,N]``.  The tiled Pallas kernel
+    (:func:`repro.kernels.budget_alloc.swap_eval`) must match this
+    bitwise at every tile shape, padded tails included."""
+    return jax.vmap(
+        lambda s, l: boost_scan_ref(g_ord, s, l, kappa_max)[0]
+    )(sel_c, leftover_c)

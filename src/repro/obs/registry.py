@@ -287,6 +287,19 @@ def absorb_summary(reg: MetricsRegistry, summary: Dict) -> None:
     g("flaas_hot_occupancy_mean", "Mean live fraction of the hot "
       "ring").set(paging.get("hot_occupancy_mean", 0.0))
 
+    pruning = summary.get("swap_pruning", {})
+    if pruning:
+        c("flaas_swap_cert_rounds_total",
+          "Rounds scheduled through the certified SP2 pruning "
+          "beam").set_total(pruning.get("rounds", 0))
+        c("flaas_swap_cert_fallback_total",
+          "Pruned rounds whose exactness certificate failed (re-ran the "
+          "full compacted sweep)").set_total(
+            pruning.get("cert_fallbacks", 0))
+        g("flaas_swap_cert_rate",
+          "Fraction of pruned rounds certified exact").set(
+            pruning.get("cert_rate", 1.0))
+
     ten = summary.get("tenancy", {})
     for tier, ts in ten.get("tiers", {}).items():
         c("flaas_tier_admitted_total", "Admissions per service tier",

@@ -40,7 +40,8 @@ _L1_KEYS = ("trace_sp1_iters", "trace_sp1_residual", "trace_x_analyst",
             "trace_utility", "trace_dominant_share")
 _L2_KEYS = ("trace_sp2_objective", "trace_boost_water",
             "trace_swap_candidates", "trace_swap_accepted",
-            "trace_grant_scale")
+            "trace_grant_scale", "trace_swap_cert_ok",
+            "trace_swap_cert_margin")
 
 
 def trace_ys_keys(level: int) -> Tuple[str, ...]:
@@ -90,6 +91,16 @@ def trace_round_outputs(res, pending, level: int) -> Dict[str, jnp.ndarray]:
         out["trace_grant_scale"] = (jnp.ones((), f32)
                                     if res.grant_scale is None
                                     else res.grant_scale)
+        # certified swap pruning (PR 9): per-round certificate verdict and
+        # tightest margin.  Full-sweep (swap_beam=0) and baseline rounds
+        # carry None — substitute the trivially-certified statics so the
+        # level-2 schema stays scheduler- and config-independent.
+        cert = getattr(res, "swap_cert_ok", None)
+        out["trace_swap_cert_ok"] = (jnp.ones((), bool) if cert is None
+                                     else cert)
+        marg = getattr(res, "swap_cert_margin", None)
+        out["trace_swap_cert_margin"] = (jnp.zeros((), f32) if marg is None
+                                         else marg.astype(f32))
     return out
 
 

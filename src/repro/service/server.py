@@ -204,6 +204,14 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             "overdraw": block_axis.max(jnp.max(res.consumed - capacity)),
             "selected": res.selected,
         }
+        # Certified swap pruning (PR 9): per-tick fallback indicator.  The
+        # gate is STATIC (config-only), so it matches the sharded
+        # out-specs; a baseline round under the same config carries no
+        # certificate (None) and reports zero fallbacks.
+        if cfg.swap_beam > 0 and cfg.refine and cfg.incremental_swap:
+            out["cert_fallback"] = (
+                jnp.zeros((), jnp.int32) if res.swap_cert_ok is None
+                else (~res.swap_cert_ok).astype(jnp.int32))
         if diagnostics:
             out.update(round_diagnostics(rnd, res, cfg, block_axis))
         # Observability ys — both statically gated, so the default
@@ -488,6 +496,12 @@ class FlaasService:
         audit_scale = ys.pop("audit_scale", None)    # [T]
         if self.cfg.validate:
             self._check_conservation(ys)
+
+        # certified swap pruning: fold this chunk's per-tick fallback
+        # indicators (present only when cfg.sched.swap_beam > 0)
+        cert_fb = ys.pop("cert_fallback", None)
+        if cert_fb is not None:
+            self.telemetry.observe_swap_certificates(cert_fb)
 
         # paging telemetry: hot-ring size/evictions/occupancy per chunk
         self.telemetry.observe_chunk_mode(mode, T)

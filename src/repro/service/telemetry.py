@@ -198,6 +198,13 @@ class StreamingTelemetry:
         self._tier_stats = {}        # tier name -> _TierStats
         self.tenant_spend = {}       # analyst id -> cumulative epsilon
         self.tenant_tier = {}        # analyst id -> tier name
+        # certified swap pruning (PR 9): rounds that ran the beamed SP2
+        # sweep and how many of them failed the exactness certificate and
+        # re-ran the full compacted sweep.  Zero until a pruned round is
+        # observed — a swap_beam=0 service carries no pruning section in
+        # its summary (keeps pre-PR-9 fingerprints unchanged).
+        self.swap_cert_rounds = 0
+        self.swap_cert_fallbacks = 0
 
     # ------------------------------------------------------------- updates
     def observe_chunk(self, ys: Dict[str, np.ndarray]) -> None:
@@ -230,6 +237,14 @@ class StreamingTelemetry:
         self.slots_evicted += int(slots_evicted)
         self._hot_occ_sum += float(hot_occupancy)
         self._paged_chunks += 1
+
+    def observe_swap_certificates(self, fallbacks: np.ndarray) -> None:
+        """One chunk's per-tick certificate-fallback indicators ([T] int,
+        1 = the pruning certificate failed and the round re-ran the full
+        compacted sweep).  Only emitted when ``swap_beam > 0``."""
+        fallbacks = np.asarray(fallbacks)
+        self.swap_cert_rounds += int(fallbacks.size)
+        self.swap_cert_fallbacks += int(np.sum(fallbacks))
 
     def observe_expired(self, n: int) -> None:
         """Pipelines completed-with-nothing because every block they
@@ -326,6 +341,13 @@ class StreamingTelemetry:
                 max(self._paged_chunks, 1),
             },
         }
+        if self.swap_cert_rounds:
+            out["swap_pruning"] = {
+                "rounds": self.swap_cert_rounds,
+                "cert_fallbacks": self.swap_cert_fallbacks,
+                "cert_rate": 1.0 - (self.swap_cert_fallbacks /
+                                    self.swap_cert_rounds),
+            }
         if self._tier_stats:
             out["tenancy"] = {
                 "tiers": {name: t.summary()

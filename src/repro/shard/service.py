@@ -62,8 +62,13 @@ _DIAG_REPLICATED = ("utility", "analyst_mask", "a_i", "mu_i", "x_analyst",
 
 
 def _ys_specs(mode: str, diagnostics: bool, trace_level: int = 0,
-              audit: bool = False) -> Dict[str, P]:
+              audit: bool = False, cert: bool = False) -> Dict[str, P]:
     ys = {k: P() for k in _METRIC_KEYS}
+    if cert:
+        # certified swap pruning: the per-tick fallback indicator is the
+        # negation of an all-analyst AND over post-collective verdicts —
+        # replicated across the mesh by construction.
+        ys["cert_fallback"] = P()
     if mode != "wrapfree":
         ys["expired"] = P()
     if mode == "paged":     # paging telemetry: post-psum scalars
@@ -112,10 +117,12 @@ def _sharded_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
         audit=audit, block_axis=BlockAxis(AXIS))
     carry = (P(None, None, AXIS), P(), P(AXIS)) if mode != "wrapfree" \
         else (P(), P(AXIS))
+    cert = (cfg.swap_beam > 0 and cfg.refine and cfg.incremental_swap)
     sm = compat.shard_map(
         fn, mesh=mesh,
         in_specs=(state_specs(), _op_specs(mode)),
-        out_specs=(carry, _ys_specs(mode, diagnostics, trace_level, audit)),
+        out_specs=(carry, _ys_specs(mode, diagnostics, trace_level, audit,
+                                    cert)),
         # check_rep/check_vma chokes on collectives under scan/while_loop
         # on older jax; replication of the P() outputs is guaranteed by
         # construction (they are all post-collective values).

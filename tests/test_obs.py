@@ -327,7 +327,8 @@ class TestDecisionTrace:
     def test_key_sets_per_level(self):
         assert trace_ys_keys(0) == ()
         l1, l2 = trace_ys_keys(1), trace_ys_keys(2)
-        assert set(l1) < set(l2) and len(l1) == 5 and len(l2) == 10
+        assert set(l1) < set(l2) and len(l1) == 5 and len(l2) == 12
+        assert "trace_swap_cert_ok" in l2 and "trace_swap_cert_ok" not in l1
 
     def test_dpbalance_records_sp_internals(self):
         trace = stress_trace()

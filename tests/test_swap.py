@@ -11,15 +11,29 @@ adjustment, suffix-only re-evaluation) is NOT exact.
 """
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (SCENARIOS, SCHEDULER_NAMES, RoundInputs,
+
+@pytest.fixture(scope="module", autouse=True)
+def _free_compiled_programs():
+    """This module compiles an unusually large number of distinct programs
+    (the differential matrix sweeps shapes, beam widths and schedulers);
+    dropping them once the module finishes keeps the whole-suite compiled
+    -code footprint bounded so later modules' compiles don't run against
+    an exhausted JIT code arena."""
+    yield
+    jax.clear_caches()
+
+from repro.core import (LOCAL, SCENARIOS, SCHEDULER_NAMES, RoundInputs,
                         SchedulerConfig, generate_episode, get_scheduler,
-                        pack_analyst, scenario_config,
+                        pack_all, pack_all_pruned, pack_analyst,
+                        scenario_config, swap_batch_objectives,
                         swap_candidate_cap, swap_candidate_objectives,
-                        swap_candidates, swap_refine_incremental,
+                        swap_candidates, swap_prune_bounds,
+                        swap_refine_beam, swap_refine_incremental,
                         swap_refine_reference)
 from repro.core.engine import ROUND_SECONDS
 from repro.core.packing import greedy_cover, proportional_boost
@@ -139,6 +153,197 @@ class TestDifferential:
             for fa, fb, name in zip(inc, ref, inc._fields):
                 assert np.array_equal(np.asarray(fa), np.asarray(fb)), \
                     (seed, kappa, name)
+
+
+BEAMS = (1, 3, 8, 100)
+
+
+def batched(*arrays):
+    """Lift per-analyst operands to the [M=1, ...] shape pack_all expects."""
+    return tuple(x[None] for x in arrays)
+
+
+def assert_pack_equal(got, ref, ctx):
+    for fa, fb, name in zip(got, ref, got._fields):
+        assert np.array_equal(np.asarray(fa), np.asarray(fb)), (*ctx, name)
+
+
+def adversarial_instances():
+    """Hand-built instances stressing the certificate, beyond the random
+    matrix: all-zero demand, everything kappa-capped, duplicate-row exact
+    ties, and near-tie objectives probing the certificate margin."""
+    out = []
+    # all-zero gamma: every boost is kappa-capped at water level inf
+    N, K = 6, 3
+    gamma = jnp.zeros((N, K), jnp.float32)
+    mu = jnp.full((N,), 1e-4, jnp.float32)
+    a = jnp.linspace(0.3, 1.0, N).astype(jnp.float32)
+    out.append(("all_zero_gamma", (gamma, mu, a, jnp.ones(N, bool),
+                                   jnp.ones(K, jnp.float32))))
+    # generous budget: every candidate feasible, every boost kappa-capped
+    r = np.random.default_rng(42)
+    gamma = jnp.asarray(r.uniform(0, 0.05, (8, 4)).astype(np.float32))
+    mu = jnp.maximum(jnp.max(gamma, 1), 1e-4)
+    a = jnp.asarray(r.uniform(0.3, 1.0, 8).astype(np.float32))
+    out.append(("kappa_capped", (gamma, mu, a, jnp.ones(8, bool),
+                                 jnp.full((4,), 50.0, jnp.float32))))
+    # duplicate rows: swapping between clones gives exactly-tied objectives
+    row = np.asarray([0.3, 0.2], np.float32)
+    gamma = jnp.asarray(np.stack([row, row, row, row]))
+    mu = jnp.full((4,), 0.3, jnp.float32)
+    a = jnp.full((4,), 1.0, jnp.float32)
+    out.append(("duplicate_ties", (gamma, mu, a, jnp.ones(4, bool),
+                                   jnp.full((2,), 0.65, jnp.float32))))
+    # near-tie: two swap targets whose weights differ by ~1 ulp, so the
+    # exact evaluation (not the bound) must break the argmax
+    gamma = jnp.asarray([[0.4, 0.1], [0.2, 0.3], [0.2, 0.3], [0.1, 0.1]],
+                        jnp.float32)
+    mu = jnp.max(gamma, 1)
+    a = jnp.asarray([1.0, 0.7, 0.7 * (1 + 1e-7), 0.2], jnp.float32)
+    out.append(("near_tie", (gamma, mu, a, jnp.ones(4, bool),
+                             jnp.asarray([0.55, 0.45], jnp.float32))))
+    return out
+
+
+class TestCertifiedPruning:
+    """Satellite harness for the PR-9 beam: pruning must be *provably*
+    exact — bitwise against the full compacted sweep whenever the
+    certificate holds, and indistinguishable end-to-end (pack_all_pruned
+    vs pack_all) always, because uncertified rounds fall back."""
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_beam_matches_full_sweep_when_certified(self, seed):
+        gamma, mu, a, active, budget = make_instance(seed)
+        sel = greedy_cover(gamma, mu, active, budget)
+        for kappa in KAPPAS:
+            full = swap_refine_incremental(gamma, mu, a, active, sel,
+                                           budget, kappa)
+            for beam in BEAMS:
+                got, cert_ok, margin = swap_refine_beam(
+                    gamma, mu, a, active, sel, budget, kappa, beam)
+                # margin is +inf when the beam covers the whole grid
+                # (nothing pruned -> trivially certified), never NaN
+                assert not np.isnan(float(margin))
+                if bool(cert_ok):
+                    np.testing.assert_array_equal(
+                        np.asarray(got), np.asarray(full),
+                        err_msg=f"certified beam diverged "
+                                f"(seed={seed}, kappa={kappa}, beam={beam})")
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_pack_all_pruned_bitwise_vs_pack_all(self, seed):
+        gamma, mu, a, active, budget = make_instance(seed)
+        for kappa in KAPPAS:
+            ref = pack_all(*batched(gamma, mu, a, active, budget), kappa,
+                           True, True, LOCAL, False)
+            for beam in BEAMS:
+                got, cert_ok, _ = pack_all_pruned(
+                    *batched(gamma, mu, a, active, budget), kappa, beam)
+                assert_pack_equal(got, ref, (seed, kappa, beam))
+
+    @pytest.mark.parametrize("name,inst", adversarial_instances())
+    def test_adversarial_instances_stay_exact(self, name, inst):
+        gamma, mu, a, active, budget = inst
+        for kappa in KAPPAS:
+            ref = pack_all(*batched(gamma, mu, a, active, budget), kappa,
+                           True, True, LOCAL, False)
+            for beam in BEAMS:
+                got, cert_ok, _ = pack_all_pruned(
+                    *batched(gamma, mu, a, active, budget), kappa, beam)
+                assert_pack_equal(got, ref, (name, kappa, beam))
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_bound_dominates_every_feasible_candidate(self, seed):
+        """Soundness of the certificate's ingredients: the closed-form
+        upper bound is >= the exact boosted objective for every valid
+        feasible candidate (the property the pruning proof rests on)."""
+        gamma, mu, a, active, budget = make_instance(seed)
+        sel = greedy_cover(gamma, mu, active, budget)
+        for kappa in KAPPAS:
+            s_c, u_c, valid_c = swap_candidates(sel, active)
+            ub = np.asarray(swap_prune_bounds(gamma, mu, a, sel, budget,
+                                              kappa, s_c, u_c, valid_c),
+                            np.float64)
+            cands, objs, valid = swap_candidate_objectives(
+                gamma, mu, a, active, sel, budget, kappa)
+            objs, valid = np.asarray(objs, np.float64), np.asarray(valid)
+            slack = 2e-4 * (1.0 + np.abs(objs))
+            bad = valid & (objs > ub + slack)
+            assert not bad.any(), (seed, kappa, np.flatnonzero(bad))
+
+
+class TestCertificateFallback:
+    """Regression: instances where the pruning bound is *not* conclusive.
+    The all-or-nothing fallback must fire and reproduce the full sweep
+    bitwise, and the failure must be observable."""
+
+    def _symmetric_instance(self):
+        # Four identical rows, equal weights: every (s, u) candidate is
+        # the same selection up to relabeling, so every upper bound ties
+        # and a width-1 beam can never separate itself from the pruned
+        # remainder — the certificate fails deterministically.
+        row = np.asarray([0.3, 0.2], np.float32)
+        gamma = jnp.asarray(np.stack([row, row, row, row]))
+        mu = jnp.full((4,), 0.3, jnp.float32)
+        a = jnp.full((4,), 1.0, jnp.float32)
+        active = jnp.ones(4, bool)
+        budget = jnp.full((2,), 0.65, jnp.float32)   # greedy takes 2 of 4
+        return gamma, mu, a, active, budget
+
+    def test_certificate_fails_and_fallback_matches_full(self):
+        gamma, mu, a, active, budget = self._symmetric_instance()
+        sel = greedy_cover(gamma, mu, active, budget)
+        assert int(np.asarray(sel).sum()) == 2       # ties actually exist
+        _, cert_ok, _ = swap_refine_beam(gamma, mu, a, active, sel, budget,
+                                         2.0, 1)
+        assert not bool(cert_ok)
+        got, cert_all, _ = pack_all_pruned(
+            *batched(gamma, mu, a, active, budget), 2.0, 1)
+        assert not bool(cert_all)
+        ref = pack_all(*batched(gamma, mu, a, active, budget), 2.0, True,
+                       True, LOCAL, False)
+        assert_pack_equal(got, ref, ("symmetric",))
+
+    def test_fallback_counter_increments(self):
+        """The certificate failure above must surface as the flaas_*
+        fallback counter through the telemetry -> registry pipeline."""
+        from repro.obs import MetricsRegistry, absorb_summary
+        from repro.service.telemetry import StreamingTelemetry
+
+        tel = StreamingTelemetry()
+        tel.observe_swap_certificates(np.asarray([0, 1, 0, 1, 1]))
+        summ = tel.summary()
+        assert summ["swap_pruning"] == {"rounds": 5, "cert_fallbacks": 3,
+                                        "cert_rate": 0.4}
+        reg = MetricsRegistry()
+        absorb_summary(reg, summ)
+        assert reg.counter("flaas_swap_cert_rounds_total", "").value() == 5
+        assert reg.counter("flaas_swap_cert_fallback_total", "").value() == 3
+
+    def test_no_pruning_section_when_beam_off(self):
+        from repro.service.telemetry import StreamingTelemetry
+        assert "swap_pruning" not in StreamingTelemetry().summary()
+
+
+class TestBatchedObjectives:
+    """The chunked batch evaluator is the single evaluation path both the
+    beam and the full sweep share — chunking must be bitwise-neutral."""
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_chunking_is_bitwise_neutral(self, seed):
+        gamma, mu, a, active, budget = make_instance(seed)
+        sel = greedy_cover(gamma, mu, active, budget)
+        s_c, u_c, _ = swap_candidates(sel, active)
+        import jax
+        cands = jax.vmap(
+            lambda s, u: sel.at[s].set(False).at[u].set(True))(s_c, u_c)
+        o0, f0 = swap_batch_objectives(gamma, mu, a, cands, budget, 8.0,
+                                       chunk=0)
+        for chunk in (1, 2, 3, cands.shape[0] + 5):
+            o, f = swap_batch_objectives(gamma, mu, a, cands, budget, 8.0,
+                                         chunk=chunk)
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(o0))
+            np.testing.assert_array_equal(np.asarray(f), np.asarray(f0))
 
 
 def first_round_inputs(ep):

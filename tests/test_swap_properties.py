@@ -8,18 +8,32 @@ without it.  Invariants, for BOTH swap engines:
 * the packed allocation is never infeasible: ``used <= budget + _FEAS``;
 * refinement never lowers the boosted objective vs the unrefined greedy
   cover.
+
+Certified-pruning invariants (PR 9):
+
+* whenever the beam certifies, its selection is bitwise the full
+  compacted sweep's — pruning never drops the true argmax;
+* beam-width monotonicity: a wider beam keeps a narrower beam's
+  certificate and its selection;
+* the tiled Pallas candidate evaluator matches the ``kernels/ref``
+  oracle bitwise at every tile shape (non-divisor tails included) and
+  under nested vmap.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="property tests require hypothesis")
-from hypothesis import given
+from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import pack_analyst, swap_refine_incremental
+from repro.core import (pack_analyst, swap_refine_beam,
+                        swap_refine_incremental)
 from repro.core.packing import (_FEAS, greedy_cover, proportional_boost,
                                 swap_refine_reference)
+from repro.kernels import ref
+from repro.kernels.budget_alloc import swap_eval as swap_eval_tiled
 
 ENGINES = {"incremental": swap_refine_incremental,
            "reference": swap_refine_reference}
@@ -66,6 +80,79 @@ def test_pack_never_infeasible(data):
                            incremental)
         used = np.asarray(res.used)
         assert (used <= np.asarray(budget) + _FEAS).all(), incremental
+
+
+@given(st.data())
+def test_certified_beam_never_drops_argmax(data):
+    """Whenever the pruning certificate holds, the beam's refined
+    selection is bit-identical to the full compacted sweep's — for every
+    instance and every beam width, including widths past the candidate
+    cap.  (Uncertified runs are covered by the fallback regression tests
+    in ``test_swap.py``; here they simply don't assert.)"""
+    gamma, mu, a, active, budget, kappa = _instance(data.draw)
+    sel = greedy_cover(gamma, mu, active, budget)
+    beam = data.draw(st.integers(1, 12))
+    refined, cert_ok, margin = swap_refine_beam(
+        gamma, mu, a, active, sel, budget, kappa, beam)
+    assert not np.isnan(float(margin))
+    if bool(cert_ok):
+        full = swap_refine_incremental(gamma, mu, a, active, sel, budget,
+                                       kappa)
+        np.testing.assert_array_equal(np.asarray(refined), np.asarray(full))
+
+
+@given(st.data())
+def test_wider_beam_keeps_certificate_and_selection(data):
+    """Beam-width monotonicity: widening the beam can only move pruned
+    bounds down and the surviving best up, so a certificate that holds at
+    width W still holds at any W' > W and yields the same selection."""
+    gamma, mu, a, active, budget, kappa = _instance(data.draw)
+    sel = greedy_cover(gamma, mu, active, budget)
+    w1 = data.draw(st.integers(1, 8))
+    w2 = w1 + data.draw(st.integers(1, 8))
+    sel1, ok1, _ = swap_refine_beam(gamma, mu, a, active, sel, budget,
+                                    kappa, w1)
+    if bool(ok1):
+        sel2, ok2, _ = swap_refine_beam(gamma, mu, a, active, sel, budget,
+                                        kappa, w2)
+        assert bool(ok2)
+        np.testing.assert_array_equal(np.asarray(sel1), np.asarray(sel2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_tiled_swap_eval_matches_oracle_bitwise(data):
+    """The VMEM-tiled candidate evaluator must reproduce the
+    ``kernels/ref`` oracle bit-for-bit at every tile shape — non-divisor
+    tiles and padded tails included — and when vmapped over a leading
+    analyst axis (the shape ``pack_all_pruned`` drives it through)."""
+    C = data.draw(st.integers(1, 7))
+    N = data.draw(st.integers(1, 6))
+    K = data.draw(st.integers(1, 9))
+    tile = data.draw(st.integers(1, C + 3))        # hits tile > C and tails
+    kappa = data.draw(st.sampled_from([1.0, 2.0, 8.0]))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    g = (rng.uniform(0, 0.5, (N, K)) *
+         (rng.random((N, K)) > 0.4)).astype(np.float32)
+    sel_c = rng.random((C, N)) > 0.4
+    left = rng.uniform(0, 1.0, (C, K)).astype(np.float32)
+    got = swap_eval_tiled(jnp.asarray(g), jnp.asarray(sel_c),
+                          jnp.asarray(left), kappa_max=kappa, tile=tile,
+                          interpret=True)
+    want = ref.swap_eval_ref(jnp.asarray(g), jnp.asarray(sel_c),
+                             jnp.asarray(left), kappa)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # nested vmap: batch a leading analyst axis over everything
+    B = 2
+    gb = jnp.asarray(np.stack([g] * B) * np.asarray([1.0, 0.7],
+                                                    np.float32)[:, None, None])
+    sb = jnp.asarray(np.stack([sel_c, ~sel_c]))
+    lb = jnp.asarray(np.stack([left, left * 0.5]))
+    got_b = jax.vmap(lambda g_, s_, l_: swap_eval_tiled(
+        g_, s_, l_, kappa_max=kappa, tile=tile, interpret=True))(gb, sb, lb)
+    want_b = jax.vmap(lambda g_, s_, l_: ref.swap_eval_ref(
+        g_, s_, l_, kappa))(gb, sb, lb)
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
 
 
 @given(st.data())

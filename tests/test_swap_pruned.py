@@ -1,0 +1,206 @@
+"""Certified swap pruning riding through the service planes.
+
+The PR-9 beam (``SchedulerConfig.swap_beam``) prunes the SP2 swap sweep
+inside every dpbalance service tick; the certificate's all-or-nothing
+fallback guarantees the refined selection is bit-identical to the full
+compacted sweep no matter which branch ran.  These tests pin that
+guarantee where it has to survive real plumbing:
+
+* a pruned service run must match an unpruned one **bitwise** — per-tick
+  metrics and final device state — including through >= 8 ring wraps of
+  the paged demand store;
+* the pruned sweep must shard: exact on a 1-shard mesh, <= 1e-5 on a
+  4-shard mesh (float reassociation in psum partials), against the plain
+  unsharded pruned service, with the ``cert_fallback`` out-spec wired
+  through ``shard_map``;
+* certificate outcomes must surface end-to-end: the telemetry
+  ``swap_pruning`` summary section and the ``flaas_swap_cert_*``
+  registry counters after a real run.
+
+Mirrors the ``tests/test_paging.py`` wrap-stress structure (same
+geometry, same bursty trace).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SchedulerConfig
+from repro.obs import MetricsRegistry, absorb_summary, render_prometheus
+from repro.service import (FlaasService, ServiceConfig,
+                           collect_service_metrics, make_trace)
+from repro.shard import ShardedFlaasService
+
+@pytest.fixture(scope="module", autouse=True)
+def _free_compiled_programs():
+    """Every service variant here (beam widths x paged x sharded) compiles
+    its own chunked tick program; drop them once the module finishes so
+    the whole-suite compiled-code footprint stays bounded."""
+    yield
+    jax.clear_caches()
+
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 4, reason="needs >= 4 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# same wrap-stress geometry as tests/test_paging.py: 8 blocks/tick into an
+# 80-slot ring, 90 ticks = >= 8 full ring wraps under bursty arrivals.
+SIZE = dict(n_devices=4, pipelines_per_analyst=6)
+RING, WRAP_TICKS, CHUNK = 80, 90, 5
+METRICS = ("round_efficiency", "round_fairness", "round_fairness_norm",
+           "round_jain", "n_allocated", "leftover")
+BEAM = 4
+
+
+def stress_trace(seed=3):
+    return make_trace("paper_default", "bursty", seed=seed,
+                      **SIZE).precompute(WRAP_TICKS)
+
+
+def service(trace, beam, paged=False, factory=FlaasService, **over):
+    cfg = ServiceConfig(scheduler="dpbalance",
+                        sched=SchedulerConfig(beta=2.2, swap_beam=beam),
+                        analyst_slots=3, pipeline_slots=6, block_slots=RING,
+                        chunk_ticks=CHUNK, admit_batch=8, max_pending=64,
+                        paged=paged, **over)
+    return factory(cfg, trace.reset())
+
+
+def assert_bitwise(ya, yb, keys=METRICS):
+    for k in keys:
+        np.testing.assert_array_equal(
+            np.asarray(ya[k]), np.asarray(yb[k]),
+            err_msg=f"metric {k!r} differs between pruned and full sweep")
+
+
+def assert_close(ya, yb, tol=1e-5, keys=METRICS):
+    for k in keys:
+        a = np.asarray(ya[k], np.float64)
+        b = np.asarray(yb[k], np.float64)
+        gap = float(np.max(np.abs(a - b)) / max(1.0, np.max(np.abs(b))))
+        assert gap <= tol, f"{k}: {gap:.2e}"
+
+
+def state_equal(a, b):
+    sa, sb = a.state, b.state
+    return (np.array_equal(np.asarray(sa.demand), np.asarray(sb.demand)) and
+            np.array_equal(np.asarray(sa.done), np.asarray(sb.done)) and
+            np.array_equal(np.asarray(sa.block_capacity),
+                           np.asarray(sb.block_capacity)))
+
+
+class TestPrunedServiceParity:
+    def test_pruned_matches_full_sweep_bitwise(self):
+        # the core contract at service level: beam on vs beam off cannot
+        # change a single scheduled bit, certificate fallbacks included.
+        trace = stress_trace()
+        full = service(trace, beam=0)
+        pruned = service(trace, beam=BEAM)
+        yf = collect_service_metrics(full, WRAP_TICKS)
+        yp = collect_service_metrics(pruned, WRAP_TICKS)
+        assert_bitwise(yp, yf)
+        assert state_equal(full, pruned)
+
+    def test_paged_ring_wrap_with_pruning_on(self):
+        # pruning must compose with the paged two-ring residency: paged +
+        # pruned vs plain + pruned, bitwise through >= 8 ring wraps.
+        trace = stress_trace()
+        plain = service(trace, beam=BEAM, paged=False)
+        paged = service(trace, beam=BEAM, paged=True)
+        yp = collect_service_metrics(plain, WRAP_TICKS)
+        ya = collect_service_metrics(paged, WRAP_TICKS)
+        assert_bitwise(ya, yp)
+        assert state_equal(plain, paged)
+        modes = paged.summary()["paging"]["mode_ticks"]
+        assert modes["paged"] >= 8 * RING // trace.blocks_per_tick
+
+    def test_wider_beam_same_service_run(self):
+        # exactness means the beam width is unobservable in the output.
+        trace = stress_trace()
+        a = collect_service_metrics(service(trace, beam=1), WRAP_TICKS)
+        b = collect_service_metrics(service(trace, beam=16), WRAP_TICKS)
+        assert_bitwise(b, a)
+
+
+class TestPrunedTelemetry:
+    def test_swap_pruning_section_and_registry_counters(self):
+        trace = stress_trace()
+        svc = service(trace, beam=BEAM)
+        svc.run(WRAP_TICKS)
+        pruning = svc.summary()["swap_pruning"]
+        assert pruning["rounds"] == WRAP_TICKS
+        assert 0 <= pruning["cert_fallbacks"] <= WRAP_TICKS
+        assert pruning["cert_rate"] == pytest.approx(
+            1.0 - pruning["cert_fallbacks"] / WRAP_TICKS)
+        reg = MetricsRegistry()
+        absorb_summary(reg, svc.summary())
+        text = render_prometheus(reg)
+        assert f"flaas_swap_cert_rounds_total {WRAP_TICKS}" in text
+        assert "flaas_swap_cert_fallback_total" in text
+        assert "flaas_swap_cert_rate" in text
+
+    def test_no_section_when_beam_off(self):
+        trace = stress_trace()
+        svc = service(trace, beam=0)
+        svc.run(2 * CHUNK)
+        assert "swap_pruning" not in svc.summary()
+        reg = MetricsRegistry()
+        absorb_summary(reg, svc.summary())
+        assert "flaas_swap_cert" not in render_prometheus(reg)
+
+    def test_telemetry_survives_checkpoint_roundtrip(self):
+        # the new counters live in telemetry state_dict like every other
+        # aggregate; a restore must not reset the certificate history.
+        trace = stress_trace()
+        svc = service(trace, beam=BEAM)
+        svc.run(3 * CHUNK)
+        sd = svc.telemetry.state_dict()
+        other = service(stress_trace(), beam=BEAM)
+        other.telemetry.load_state_dict(sd)
+        assert other.telemetry.swap_cert_rounds == 3 * CHUNK
+        assert other.telemetry.swap_cert_fallbacks == \
+            svc.telemetry.swap_cert_fallbacks
+
+
+@multi_device
+class TestShardedPrunedParity:
+    """The beam's bound/top-k/certificate all ride the same BlockAxis
+    hooks as the full sweep; the ``cert_fallback`` ys adds one replicated
+    P() out-spec.  Parity against the plain unsharded pruned service."""
+
+    def test_one_shard_exact(self):
+        trace = stress_trace()
+        plain = service(trace, beam=BEAM)
+        sharded = service(trace, beam=BEAM,
+                          factory=lambda c, t: ShardedFlaasService(
+                              c, t, n_shards=1))
+        yp = collect_service_metrics(plain, WRAP_TICKS)
+        ys = collect_service_metrics(sharded, WRAP_TICKS)
+        assert_bitwise(ys, yp)
+        assert sharded.summary()["swap_pruning"]["rounds"] == WRAP_TICKS
+
+    def test_four_shards_match(self):
+        trace = stress_trace()
+        plain = service(trace, beam=BEAM)
+        sharded = service(trace, beam=BEAM,
+                          factory=lambda c, t: ShardedFlaasService(
+                              c, t, n_shards=4))
+        yp = collect_service_metrics(plain, WRAP_TICKS)
+        ys = collect_service_metrics(sharded, WRAP_TICKS)
+        assert_close(ys, yp)
+        assert sharded.summary()["swap_pruning"]["rounds"] == WRAP_TICKS
+
+    def test_four_shards_paged_with_pruning(self):
+        # all three planes at once: sharded ledger stripes, paged demand
+        # residency through ring wraps, certified swap pruning.
+        trace = stress_trace()
+        plain = service(trace, beam=BEAM, paged=False)
+        sharded = service(trace, beam=BEAM, paged=True,
+                          factory=lambda c, t: ShardedFlaasService(
+                              c, t, n_shards=4))
+        yp = collect_service_metrics(plain, WRAP_TICKS)
+        ys = collect_service_metrics(sharded, WRAP_TICKS)
+        assert_close(ys, yp)
+        assert sharded.summary()["paging"]["mode_ticks"]["paged"] > 0
+        assert sharded.summary()["swap_pruning"]["rounds"] == WRAP_TICKS
