@@ -354,6 +354,47 @@ def smoke() -> tuple:
               file=sys.stderr)
         failures += 1
 
+    # sp1_warm_parity smoke: warm-started SP1 duals vs cold solves on the
+    # same episodes for all four schedulers — the scale-normalized metric
+    # gap must stay within 10x the solver tolerance (baselines run no SP1,
+    # so they come out bitwise identical).  ASSERTED, speedup reported for
+    # the one scheduler that actually solves SP1 (dpbalance).
+    try:
+        import dataclasses
+
+        import numpy as np
+
+        warm_cfg = dataclasses.replace(cfg, sp1_warm_start=True)
+        tol = 10 * cfg.solver_tol
+        keys = ("round_efficiency", "round_fairness", "n_allocated",
+                "leftover")
+        worst = 0.0
+        for name in SCHEDULER_NAMES:
+            ya = run_episode(ep, cfg, name)
+            yb = run_episode(ep, warm_cfg, name)
+            for k in keys:
+                a = np.asarray(ya[k], np.float64)
+                b = np.asarray(yb[k], np.float64)
+                gap = float(np.max(np.abs(a - b)) /
+                            max(1.0, np.max(np.abs(a))))
+                worst = max(worst, gap)
+                if gap > tol:
+                    raise AssertionError(
+                        f"warm/cold parity violated on {name}/{k!r}: "
+                        f"{gap:.2e} > {tol:.2e}")
+        us_c = time_fn(lambda e: run_episode(e, cfg, "dpbalance"),
+                       ep, iters=2)
+        us_w = time_fn(lambda e: run_episode(e, warm_cfg, "dpbalance"),
+                       ep, iters=2)
+        rows.append(("smoke/sp1_warm_parity", us_w, derived(
+            cold_us=round(us_c, 1), speedup=round(us_c / us_w, 2),
+            max_gap=float(f"{worst:.3e}"), parity=1)))
+    except Exception as e:
+        traceback.print_exc()
+        print(f"smoke/sp1_warm_parity,NaN,error={type(e).__name__}",
+              file=sys.stderr)
+        failures += 1
+
     # shard_throughput smoke: the sharded service over however many
     # devices the runner has (1 on a plain CPU; the sharded CI job runs
     # with an 8-device emulated mesh), ring wrap included.

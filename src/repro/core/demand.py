@@ -105,6 +105,8 @@ class RoundInputs:
     budget_total: Array  # [K] the block's *total* budget (normalization base)
     now: Array           # scalar — current time (seconds)
     weight: Optional[Array] = None  # [M] per-analyst tier weight (or None)
+    lam: Optional[Array] = None     # [K] previous round's SP1 duals (warm
+                                    #   start; None = cold, also structural)
 
     @property
     def shape(self):

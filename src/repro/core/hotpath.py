@@ -65,6 +65,42 @@ def matvec_t(c: jax.Array, x: jax.Array, use_pallas: bool = False) -> jax.Array:
     return matvec(c.T, x, use_pallas=True)
 
 
+def dual_step(c: jax.Array, lam: jax.Array, w_pow: jax.Array, beta: float,
+              xcap: jax.Array, mask: jax.Array, cap: jax.Array,
+              cap_safe: jax.Array, use_pallas: bool = False,
+              block_axis=None):
+    """One SP1 dual-ascent sweep: ``x(lambda)`` and the block residual.
+
+    Computes the KKT closed form ``x_i = clip((w_pow_i / sum_k c_ik
+    lam_k)^(1/beta), xcap_i)`` masked to participating analysts, then the
+    load residual ``g_k = (sum_i c_ik x_i - cap_k) / cap_safe_k``.
+    Returns ``(x [M], g [K])``.
+
+    ``use_pallas`` fuses both ``[M, K]`` sweeps into one tiled kernel
+    (:func:`repro.kernels.budget_alloc.dual_step`) with the K-sized load
+    accumulator in VMEM scratch, replacing the two separate matvec
+    round-trips the solver otherwise pays per iteration.  The kernel path
+    requires a local block axis: on a sharded mesh the denominator is a
+    cross-shard psum that cannot live inside a per-device kernel, so
+    sharded callers keep the two-matvec path (kernels still serve the
+    local partial sums when ``use_pallas`` is set).
+    """
+    _EPS = 1e-12
+    if use_pallas and (block_axis is None or not block_axis.sharded):
+        from repro.kernels.budget_alloc import dual_step as dual_kernel
+        return dual_kernel(c, lam, w_pow, xcap, mask, cap, cap_safe,
+                           beta=beta, interpret=_interpret())
+    denom = matvec(c, lam, use_pallas)
+    if block_axis is not None:
+        denom = block_axis.sum(denom)
+    denom = jnp.maximum(denom, _EPS)
+    x = (w_pow / denom) ** (1.0 / beta)
+    x = jnp.minimum(x, xcap)
+    x = jnp.where(mask, x, 0.0)
+    g = (matvec_t(c, x, use_pallas) - cap) / cap_safe
+    return x, g
+
+
 def boost_scan(g_ord: jax.Array, sel_ord: jax.Array, leftover: jax.Array,
                kappa_max: float, use_pallas: bool = False,
                block_axis=None):

@@ -52,6 +52,12 @@ class SchedulerConfig:
                                     # compacted sweep when the exactness
                                     # certificate fails.  0 (default) keeps
                                     # the full sweep, bitwise as before.
+    sp1_warm_start: bool = False    # carry SP1 duals across rounds
+                                    # (``rnd.lam`` in, ``sp1_lam`` out) and
+                                    # use the adaptive ascent step.  The
+                                    # fixed point is unique, so warm solves
+                                    # agree with cold within 10*solver_tol;
+                                    # off (default) is bitwise as before.
 
     def effective_lambda(self) -> float:
         return ut.default_lambda(self.beta) if self.lam is None else self.lam
@@ -86,6 +92,10 @@ class RoundResult(NamedTuple):
     # --- certified swap pruning (PR 9) ---------------------------------
     swap_cert_ok: jax.Array | None = None      # scalar bool: beam certified
     swap_cert_margin: jax.Array | None = None  # scalar: tightest margin
+    # --- warm-started SP1 (PR 10) --------------------------------------
+    sp1_lam: jax.Array | None = None  # [K] final duals (only when
+                                      # ``sp1_warm_start``; local stripe
+                                      # on a sharded mesh)
 
 
 def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
@@ -114,10 +124,12 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
 
     # SP1 — analyst-level alpha-fair allocation.
     c = view.gamma_i * (view.a_i[:, None] if cfg.weighted_constraints else 1.0)
+    warm = cfg.sp1_warm_start
     sp1 = alpha_fair_waterfill(
         view.mu_i, view.a_i, c, view.mask, cap=cap_frac,
         beta=cfg.beta, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-        use_pallas=cfg.use_pallas, block_axis=block_axis)
+        use_pallas=cfg.use_pallas, block_axis=block_axis,
+        lam0=rnd.lam if warm else None, adaptive=warm)
     budget_i = view.gamma_i * sp1.x[:, None]          # [M, K] granted vectors
 
     # SP2 — per-analyst packing (Alg.1 lines 3-7); per-pipeline weights
@@ -161,7 +173,8 @@ def _schedule_round(rnd: dm.RoundInputs, cfg: SchedulerConfig,
         sp1_iters=sp1.iters, mu_real=mu_real, sp2_objective=pack.objective,
         sp2_water=pack.water, swap_accepted=pack.swapped,
         grant_scale=grant_scale,
-        swap_cert_ok=cert_ok, swap_cert_margin=cert_margin)
+        swap_cert_ok=cert_ok, swap_cert_margin=cert_margin,
+        sp1_lam=sp1.lam if warm else None)
 
 
 @functools.lru_cache(maxsize=32)

@@ -57,7 +57,8 @@ def _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas=False,
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "max_iters", "tol",
-                                             "use_pallas", "block_axis"))
+                                             "use_pallas", "block_axis",
+                                             "adaptive"))
 def alpha_fair_waterfill(
     mu: jax.Array,          # [M] analyst dominant-share coefficient
     a: jax.Array,           # [M] T(t_i) l_i weights
@@ -69,6 +70,8 @@ def alpha_fair_waterfill(
     tol: float = 1e-6,
     use_pallas: bool = False,   # route [M,K] sweeps through Pallas kernels
     block_axis: BlockAxis = LOCAL,  # cross-shard hooks (repro.shard)
+    lam0: jax.Array | None = None,  # [K] warm-start duals (None = cold ones)
+    adaptive: bool = False,     # adaptive ascent step (warm-start mode)
 ) -> WaterfillResult:
     """Solve SP1.  Returns ratios x_i >= 0 with sum_i c_ik x_i <= cap_k.
 
@@ -76,6 +79,15 @@ def alpha_fair_waterfill(
     block stripes and the per-block multipliers stay shard-local for the
     whole ascent; only the [M]-sized analyst aggregates (matvec partials,
     feasibility caps, the KKT error) cross the mesh, once per iteration.
+
+    ``lam0`` warm-starts the ascent from a previous round's multipliers
+    (the fixed point is unique for beta > 0, so the solve is
+    path-independent: warm and cold runs land on the same x up to tol).
+    ``adaptive`` replaces the fixed decaying step with one that grows
+    while the KKT residual falls and backtracks when it rises — the step
+    state resets every call, so a warm entry re-probes from eta0 instead
+    of resuming a decayed schedule.  Both default off; the off path is
+    trace-identical to the historical solver.
     """
     assert beta > 0, "alpha-fairness requires beta > 0"
     M, K = c.shape
@@ -91,33 +103,77 @@ def alpha_fair_waterfill(
     mask = mask & (cmax > _EPS) & jnp.isfinite(xcap)
     xcap = jnp.where(mask, xcap, 0.0)
 
-    lam0 = jnp.ones((K,), dtype=c.dtype)
+    if lam0 is None:
+        lam_init = jnp.ones((K,), dtype=c.dtype)
+    else:
+        lam_init = jnp.clip(lam0.astype(c.dtype), 1e-12, 1e12)
     cap_safe = jnp.maximum(cap, _EPS)
 
-    def cond(state):
-        lam, it, viol = state
-        return (it < max_iters) & (viol > tol)
+    def residual(lam):
+        """One fused sweep: x(lambda) and the per-block residual g."""
+        x, g = hotpath.dual_step(c, lam, w_pow, beta, xcap, mask, cap,
+                                 cap_safe, use_pallas=use_pallas,
+                                 block_axis=block_axis)
+        return x, g
 
-    def body(state):
-        lam, it, _ = state
-        x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas,
-                         block_axis)
-        g = (hotpath.matvec_t(c, x, use_pallas) - cap) / cap_safe  # [K] local
-        eta = 0.5 / (1.0 + 0.001 * it)           # decaying multiplicative step
-        lam_new = lam * jnp.exp(eta * g)
-        lam_new = jnp.clip(lam_new, 1e-12, 1e12)
+    def kkt(lam_new, g):
         # KKT error: primal feasibility AND complementary slackness.  Checking
         # feasibility alone would accept lam=1 on an underloaded system.
         # The error is reduced across shards so every shard's while_loop
         # agrees on the iteration count.
         feas = jnp.max(jnp.maximum(g, 0.0))
         comp = jnp.max(lam_new * jnp.abs(g))
-        viol = block_axis.max(jnp.maximum(feas, comp))
-        return lam_new, it + 1, viol
+        return block_axis.max(jnp.maximum(feas, comp))
 
-    lam, iters, _ = jax.lax.while_loop(
-        cond, body, (lam0, jnp.array(0), jnp.array(jnp.inf, dtype=c.dtype))
-    )
+    if adaptive:
+        # Adaptive multiplicative step: grow while the KKT residual falls,
+        # backtrack when it rises.  The backtrack floor is deliberately
+        # high (0.2): the residual legitimately *rises* while a multiplier
+        # climbs from near-zero toward a newly tight constraint (comp =
+        # lam*|g| grows with lam), and a collapsed step would stall that
+        # climb — the floor keeps worst-case progress at decay-schedule
+        # speed while the growth arm wins everywhere else.  Because the
+        # residual is globally reduced, every shard takes the same eta
+        # branch and the sharded while_loops stay in lockstep.
+        eta0, eta_min, eta_max = 0.5, 0.2, 1.5
+        grow, shrink = 1.2, 0.7
+
+        def cond(state):
+            _, it, viol, _ = state
+            return (it < max_iters) & (viol > tol)
+
+        def body(state):
+            lam, it, viol_prev, eta = state
+            _, g = residual(lam)
+            lam_new = jnp.clip(lam * jnp.exp(eta * g), 1e-12, 1e12)
+            viol = kkt(lam_new, g)
+            eta_new = jnp.where(viol <= viol_prev,
+                                jnp.minimum(eta * grow, eta_max),
+                                jnp.maximum(eta * shrink, eta_min))
+            return lam_new, it + 1, viol, eta_new
+
+        lam, iters, _, _ = jax.lax.while_loop(
+            cond, body,
+            (lam_init, jnp.asarray(0, jnp.int32),
+             jnp.asarray(jnp.inf, dtype=c.dtype),
+             jnp.asarray(eta0, dtype=c.dtype)))
+    else:
+        def cond(state):
+            lam, it, viol = state
+            return (it < max_iters) & (viol > tol)
+
+        def body(state):
+            lam, it, _ = state
+            _, g = residual(lam)
+            eta = 0.5 / (1.0 + 0.001 * it)   # decaying multiplicative step
+            lam_new = lam * jnp.exp(eta * g)
+            lam_new = jnp.clip(lam_new, 1e-12, 1e12)
+            return lam_new, it + 1, kkt(lam_new, g)
+
+        lam, iters, _ = jax.lax.while_loop(
+            cond, body,
+            (lam_init, jnp.asarray(0, jnp.int32),
+             jnp.asarray(jnp.inf, dtype=c.dtype)))
     x = _x_of_lambda(lam, c, w_pow, beta, xcap, mask, use_pallas, block_axis)
 
     # Final exact projection: uniform scale-down of any residual overshoot so

@@ -9,7 +9,7 @@ import functools
 import jax
 
 from . import ref
-from .budget_alloc import boost_scan, matvec, matvec_t, rowmax
+from .budget_alloc import boost_scan, dual_step, matvec, matvec_t, rowmax
 from .decode_attention import decode_attention
 from .dp_clip_noise import clip_accumulate, dp_clip_accumulate, rownorms
 from .flash_attention import flash_attention
@@ -70,8 +70,17 @@ def boost_scan_op(g_ord, sel_ord, leftover, *, kappa_max=2.0,
                       interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("beta", "block_m", "interpret"))
+def dual_step_op(c, lam, w_pow, xcap, mask, cap, cap_safe, *, beta=2.2,
+                 block_m=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return dual_step(c, lam, w_pow, xcap, mask, cap, cap_safe, beta=beta,
+                     block_m=block_m, interpret=interpret)
+
+
 __all__ = ["flash_attention_op", "decode_attention_op", "rglru_scan_op",
            "dp_clip_accumulate_op", "rowmax_op", "matvec_op",
-           "boost_scan_op", "ref", "flash_attention", "decode_attention",
-           "rglru_scan", "dp_clip_accumulate", "rownorms",
-           "clip_accumulate", "rowmax", "matvec", "matvec_t", "boost_scan"]
+           "boost_scan_op", "dual_step_op", "ref", "flash_attention",
+           "decode_attention", "rglru_scan", "dp_clip_accumulate",
+           "rownorms", "clip_accumulate", "rowmax", "matvec", "matvec_t",
+           "boost_scan", "dual_step"]

@@ -82,6 +82,31 @@ def matvec_ref(c, lam):
     return c.astype(jnp.float32) @ lam.astype(jnp.float32)
 
 
+def dual_step_ref(c, lam, w_pow, xcap, mask, cap, cap_safe, beta):
+    """Fused SP1 dual-ascent sweep contract: ``x_i = clip((w_pow_i /
+    sum_k c_ik lam_k)^(1/beta), xcap_i)`` masked, then the load residual
+    ``g_k = (sum_i c_ik x_i - cap_k) / cap_safe_k`` with the load
+    accumulated strictly row-sequentially (row 0..M-1).  The Pallas
+    kernel (:func:`repro.kernels.budget_alloc.dual_step`) must match this
+    bitwise at every tile shape, padded tails included, and under vmap."""
+    eps = 1e-12
+    cf = c.astype(jnp.float32)
+    denom = jnp.maximum(
+        jnp.sum(cf * lam.astype(jnp.float32)[None, :], axis=1), eps)
+    x = (w_pow.astype(jnp.float32) / denom) ** (1.0 / float(beta))
+    x = jnp.minimum(x, xcap.astype(jnp.float32))
+    x = jnp.where(mask, x, 0.0)
+
+    def step(acc, cx):
+        cj, xj = cx
+        return acc + cj * xj, None
+
+    load, _ = jax.lax.scan(
+        step, jnp.zeros((cf.shape[1],), jnp.float32), (cf, x))
+    g = (load - cap.astype(jnp.float32)) / cap_safe.astype(jnp.float32)
+    return x, g
+
+
 def boost_scan_ref(g_ord, sel_ord, leftover, kappa_max):
     """SP2 sequential proportional boost (packing Eq 20 heuristic):
     visit rows of g_ord [N,K] in order; each selected row j gets

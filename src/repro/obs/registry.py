@@ -27,6 +27,12 @@ _TYPES = ("counter", "gauge", "histogram")
 # default histogram buckets: wall-clock seconds (phase timers, chunk walls)
 DEFAULT_BUCKETS = (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 60.0)
 
+# SP1 dual-ascent iteration counts (warm-started solver, PR 10): a warm
+# steady-state solve lands in the 10-20 band, a cold/perturbed one in the
+# hundreds, and the top bucket matches the solver's default max_iters.
+SP1_ITER_BUCKETS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0,
+                    1000.0, 2000.0, 4000.0)
+
 
 def _check_labels(labelnames: Tuple[str, ...], labels: Tuple[str, ...]):
     if len(labels) != len(labelnames):
@@ -286,6 +292,27 @@ def absorb_summary(reg: MetricsRegistry, summary: Dict) -> None:
       "mints").set_total(paging.get("slots_evicted", 0))
     g("flaas_hot_occupancy_mean", "Mean live fraction of the hot "
       "ring").set(paging.get("hot_occupancy_mean", 0.0))
+
+    sp1 = summary.get("sp1_solver", {})
+    if sp1:
+        c("flaas_sp1_warm_starts_total",
+          "SP1 solves entered from carried duals").set_total(
+            sp1.get("warm_starts", 0))
+        c("flaas_sp1_warm_resets_total",
+          "Per-slot dual resets to the cold value at block mint").set_total(
+            sp1.get("warm_resets", 0))
+        # the telemetry plane already folded the per-tick counts into
+        # bucket totals (same edges), so the histogram cell is set to the
+        # cumulative values directly — idempotent like set_total above.
+        hist = reg.histogram("flaas_sp1_iters",
+                             "SP1 dual-ascent iterations per round",
+                             buckets=SP1_ITER_BUCKETS)
+        cell = hist._cell(())
+        cell["counts"] = np.asarray(sp1.get("iters_buckets",
+                                            cell["counts"]),
+                                    np.int64).copy()
+        cell["n"] = int(sp1.get("rounds", 0))
+        cell["sum"] = float(sp1.get("iters_total", 0))
 
     pruning = summary.get("swap_pruning", {})
     if pruning:

@@ -54,8 +54,11 @@ from .traces import ArrivalTrace, demand_window_ticks
 # per-class admission queue.  Version 3 (observability): adds the metrics
 # registry / phase profiler snapshots and the audit slot mirrors — all
 # optional, so v1/v2 checkpoints restore with those planes empty.
-_CHECKPOINT_VERSION = 3
-_COMPAT_VERSIONS = (1, 2, 3)
+# Version 4 (warm SP1): adds the ServiceState.lam device leaf (per-block
+# SP1 duals carried across ticks); older checkpoints restore with a fresh
+# cold dual (all ones), which only costs a one-chunk re-warm.
+_CHECKPOINT_VERSION = 4
+_COMPAT_VERSIONS = (1, 2, 3, 4)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +144,13 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
     f32 = state.demand.dtype
     ticks = state.tick + jnp.arange(n_ticks, dtype=jnp.int32)
     retire = mode != "wrapfree"
+    # Warm-started SP1 (PR 10): the per-block duals join the scan carry so
+    # every tick's solve resumes from the previous tick's fixed point.
+    # Minted slots reset their dual entry to 1.0 (the cold value) — the
+    # new block's constraint has no history — which is the service-plane
+    # mirror of the engine's birth-round reset.  Off (default) keeps the
+    # carry structure, and therefore the compiled program, unchanged.
+    warm = cfg.sp1_warm_start
     if mode == "paged":
         *tick_ops, mint_tick, hot_slots = mint_ops   # [B] i32, [S, Hp/S]
         hot_slots = hot_slots.reshape(-1)            # local hot-ring slots
@@ -171,7 +181,8 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
     else:
         tick_ops = tuple(mint_ops)
 
-    def tick_out(view, pending, capacity, budget_total, created, t):
+    def tick_out(view, pending, capacity, budget_total, created, t,
+                 lam=None):
         """Shared per-tick round + metrics, all mint modes."""
         now = t.astype(f32) * ROUND_SECONDS
         rnd = RoundInputs(
@@ -182,7 +193,8 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             capacity=capacity, budget_total=budget_total, now=now,
             # per-analyst tier weight (scan constant; all-ones in the
             # default single-tier service, which is bitwise-neutral)
-            weight=state.weight)
+            weight=state.weight,
+            lam=lam)
         res = round_fn(rnd, cfg, block_axis=block_axis)
         mask = jnp.sum(pending, axis=1) > 0
         out = {
@@ -212,6 +224,11 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             out["cert_fallback"] = (
                 jnp.zeros((), jnp.int32) if res.swap_cert_ok is None
                 else (~res.swap_cert_ok).astype(jnp.int32))
+        if warm:
+            # solver effort per tick — a baseline round runs no SP1, so
+            # it reports zero (keeps the sharded out-specs static)
+            out["sp1_iters"] = (jnp.zeros((), jnp.int32)
+                                if res.sp1_iters is None else res.sp1_iters)
         if diagnostics:
             out.update(round_diagnostics(rnd, res, cfg, block_axis))
         # Observability ys — both statically gated, so the default
@@ -233,6 +250,10 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
         # referenced the evicted block.  A pipeline spawning at exactly
         # the mint tick demands the block being minted then (prefetched
         # admission wrote it at the boundary), so its demand survives.
+        if warm:
+            *carry, lam = carry
+        else:
+            lam = None
         done, capacity = carry[-2:]
         if mode == "paged":
             minted, budgets, budget_total, created, t = xs
@@ -248,10 +269,16 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             capacity = jnp.where(minted, budgets, capacity)
             view = DemandView(base=demand)
             any_demand = jnp.any(demand > 0.0, axis=-1)
+        elif warm:  # wrap-free + warm: mint mask rides along for the reset
+            mint_add, budget_total, created, minted, t = xs
+            view = DemandView(base=state.demand)
+            capacity = capacity + mint_add
         else:       # wrap-free: demand is a scan constant, mint is an add
             mint_add, budget_total, created, t = xs
             view = DemandView(base=state.demand)
             capacity = capacity + mint_add
+        if warm:
+            lam = jnp.where(minted, 1.0, lam)
         pending = (state.spawn_tick <= t) & ~done
         if retire:
             # A long-pending pipeline can outlive its every demanded block
@@ -263,30 +290,35 @@ def _chunk_metrics(state: ServiceState, mint_ops, *,
             expired = pending & ~has_demand
             pending = pending & has_demand
         res, out = tick_out(view, pending, capacity, budget_total,
-                            created, t)
+                            created, t, lam)
         capacity = jnp.maximum(capacity - res.consumed, 0.0)
         done = done | res.selected
         if retire:
             done = done | expired
             out["expired"] = expired
+        if warm and res.sp1_lam is not None:
+            lam = res.sp1_lam       # baselines run no SP1: pass-through
         new_carry = (done, capacity) if mode != "carry" \
             else (demand, done, capacity)
+        if warm:
+            new_carry = new_carry + (lam,)
         return new_carry, out
 
     init = (state.done, state.block_capacity)
     if mode == "carry":
         init = (state.demand,) + init
+    if warm:
+        init = init + (state.lam,)
     final, ys = jax.lax.scan(body, init, tuple(tick_ops) + (ticks,))
     if mode == "paged":
         # chunk-boundary eviction sweep: apply the chunk's accumulated
         # wipes to the cold page store in one fused elementwise pass
         # (shard-local on a striped mesh — mint_tick shards with the
         # ledger, so no cross-shard traffic).
-        done_f, cap_f = final
         mt_b = mint_tick[None, None, :]
         swept = jnp.where((mt_b != NEVER) & (spawn_b < mt_b), 0.0,
                           state.demand)
-        final = (swept, done_f, cap_f)
+        final = (swept,) + tuple(final)
         ys["hot_evicted"] = hot_evicted
         ys["hot_live"] = hot_live
     # Return only what changed: echoing the (unchanged) demand through the
@@ -437,6 +469,11 @@ class FlaasService:
             mode = "wrapfree"   # budgets rows double as the capacity-add
             ops = (jnp.asarray(plan.budgets),
                    jnp.asarray(plan.budget_total), jnp.asarray(plan.created))
+            if self.cfg.sched.sp1_warm_start:
+                # warm SP1 resets minted slots' duals even on wrap-free
+                # chunks (fresh slots hold 1.0 already, so this is a
+                # value-level no-op, but it keeps the tick body uniform)
+                ops = ops + (jnp.asarray(plan.mask),)
         else:
             mode = "paged" if plan.pages is not None else "carry"
             ops = (jnp.asarray(plan.mask), jnp.asarray(plan.budgets),
@@ -477,10 +514,14 @@ class FlaasService:
             final, ys = step(self.state, ops)
         self._ledger_budget = plan.next_budget
         self._ledger_birth = plan.next_birth
+        warm = self.cfg.sched.sp1_warm_start
+        if warm:
+            *final, lam_f = final
         self.state = dataclasses.replace(
             self.state,
             demand=final[0] if plan.retire else self.state.demand,
             done=final[-2], block_capacity=final[-1],
+            lam=lam_f if warm else self.state.lam,
             block_budget=jnp.asarray(plan.next_budget),
             block_birth=jnp.asarray(plan.next_birth),
             tick=jnp.asarray(tick0 + T, jnp.int32))
@@ -502,6 +543,13 @@ class FlaasService:
         cert_fb = ys.pop("cert_fallback", None)
         if cert_fb is not None:
             self.telemetry.observe_swap_certificates(cert_fb)
+
+        # warm SP1: fold this chunk's per-tick solver iteration counts +
+        # the mint-driven dual resets (present only when warm-start is on)
+        sp1_iters = ys.pop("sp1_iters", None)
+        if sp1_iters is not None:
+            self.telemetry.observe_sp1(sp1_iters,
+                                       resets=int(plan.mask.sum()))
 
         # paging telemetry: hot-ring size/evictions/occupancy per chunk
         self.telemetry.observe_chunk_mode(mode, T)
@@ -747,7 +795,8 @@ class FlaasService:
                 demand=np.asarray(device.demand)[:, :, idx],
                 block_budget=np.asarray(device.block_budget)[idx],
                 block_capacity=np.asarray(device.block_capacity)[idx],
-                block_birth=np.asarray(device.block_birth)[idx])
+                block_birth=np.asarray(device.block_birth)[idx],
+                lam=np.asarray(device.lam)[idx])
             ledger_budget = ledger_budget[idx]
             ledger_birth = ledger_birth[idx]
         self.state = jax.tree.map(jnp.asarray, device)

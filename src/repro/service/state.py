@@ -47,6 +47,8 @@ class ServiceState:
     block_budget: jax.Array    # [B] total budget (1.0 pre-creation sentinel)
     block_capacity: jax.Array  # [B] remaining budget (0 pre-creation)
     block_birth: jax.Array     # [B] i32 mint tick (-1 pre-creation)
+    lam: jax.Array             # [B] SP1 dual carried across ticks (1.0 cold;
+                               #   reset to 1.0 when the slot is re-minted)
     tick: jax.Array            # scalar i32 — next tick the server will run
 
     @property
@@ -67,13 +69,15 @@ class ServiceState:
             block_budget=jnp.ones((B,), jnp.float32),
             block_capacity=jnp.zeros((B,), jnp.float32),
             block_birth=jnp.full((B,), -1, jnp.int32),
+            lam=jnp.ones((B,), jnp.float32),
             tick=jnp.asarray(0, jnp.int32))
 
 
 jax.tree_util.register_dataclass(
     ServiceState,
     data_fields=["demand", "arrival", "loss", "spawn_tick", "done", "weight",
-                 "block_budget", "block_capacity", "block_birth", "tick"],
+                 "block_budget", "block_capacity", "block_birth", "lam",
+                 "tick"],
     meta_fields=[])
 
 

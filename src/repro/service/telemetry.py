@@ -205,6 +205,20 @@ class StreamingTelemetry:
         # its summary (keeps pre-PR-9 fingerprints unchanged).
         self.swap_cert_rounds = 0
         self.swap_cert_fallbacks = 0
+        # warm-started SP1 (PR 10): dual-ascent effort per tick, folded
+        # into the same bucket edges the registry's flaas_sp1_iters
+        # histogram exports.  Zero until a warm round is observed — a
+        # warm-off service carries no sp1_solver section in its summary
+        # (keeps pre-PR-10 fingerprints unchanged).
+        from repro.obs.registry import SP1_ITER_BUCKETS
+        self._sp1_edges = np.asarray(SP1_ITER_BUCKETS, np.float64)
+        self.sp1_rounds = 0
+        self.sp1_iters_sum = 0
+        self.sp1_iters_max = 0
+        self.sp1_warm_starts = 0
+        self.sp1_warm_resets = 0
+        self.sp1_iters_buckets = np.zeros(len(SP1_ITER_BUCKETS) + 1,
+                                          np.int64)
 
     # ------------------------------------------------------------- updates
     def observe_chunk(self, ys: Dict[str, np.ndarray]) -> None:
@@ -245,6 +259,24 @@ class StreamingTelemetry:
         fallbacks = np.asarray(fallbacks)
         self.swap_cert_rounds += int(fallbacks.size)
         self.swap_cert_fallbacks += int(np.sum(fallbacks))
+
+    def observe_sp1(self, iters: np.ndarray, resets: int = 0) -> None:
+        """One warm-started chunk's per-tick SP1 dual-ascent iteration
+        counts ([T] int) plus the chunk's mint-driven dual resets (slots
+        whose carried multiplier was returned to the cold value).  Only
+        emitted when ``sp1_warm_start`` is on."""
+        iters = np.asarray(iters, np.int64).ravel()
+        if iters.size == 0:
+            return
+        self.sp1_rounds += int(iters.size)
+        self.sp1_iters_sum += int(iters.sum())
+        self.sp1_iters_max = max(self.sp1_iters_max, int(iters.max()))
+        self.sp1_warm_starts += int(iters.size)
+        self.sp1_warm_resets += int(resets)
+        idx = np.searchsorted(self._sp1_edges, iters.astype(np.float64),
+                              side="left")
+        self.sp1_iters_buckets += np.bincount(
+            idx, minlength=self._sp1_edges.size + 1)
 
     def observe_expired(self, n: int) -> None:
         """Pipelines completed-with-nothing because every block they
@@ -295,7 +327,8 @@ class StreamingTelemetry:
         and RNG state) — restoring this into a fresh instance continues
         the stream bitwise (see :meth:`FlaasService.save_checkpoint`)."""
         d = {k: v for k, v in self.__dict__.items()
-             if k not in ("_latency", "_tier_stats")}
+             if k not in ("_latency", "_tier_stats", "_sp1_edges")}
+        d["sp1_iters_buckets"] = self.sp1_iters_buckets.copy()
         d["mode_ticks"] = dict(self.mode_ticks)
         d["tenant_spend"] = dict(self.tenant_spend)
         d["tenant_tier"] = dict(self.tenant_tier)
@@ -314,6 +347,8 @@ class StreamingTelemetry:
         for k, v in d.items():
             if k not in self.__dict__:
                 raise ValueError(f"unknown telemetry checkpoint field {k!r}")
+            if k == "sp1_iters_buckets":
+                v = np.asarray(v, np.int64).copy()
             setattr(self, k, v)
 
     # ------------------------------------------------------------- summary
@@ -347,6 +382,16 @@ class StreamingTelemetry:
                 "cert_fallbacks": self.swap_cert_fallbacks,
                 "cert_rate": 1.0 - (self.swap_cert_fallbacks /
                                     self.swap_cert_rounds),
+            }
+        if self.sp1_rounds:
+            out["sp1_solver"] = {
+                "rounds": self.sp1_rounds,
+                "iters_total": self.sp1_iters_sum,
+                "iters_mean": self.sp1_iters_sum / self.sp1_rounds,
+                "iters_max": self.sp1_iters_max,
+                "warm_starts": self.sp1_warm_starts,
+                "warm_resets": self.sp1_warm_resets,
+                "iters_buckets": [int(x) for x in self.sp1_iters_buckets],
             }
         if self._tier_stats:
             out["tenancy"] = {

@@ -62,13 +62,19 @@ _DIAG_REPLICATED = ("utility", "analyst_mask", "a_i", "mu_i", "x_analyst",
 
 
 def _ys_specs(mode: str, diagnostics: bool, trace_level: int = 0,
-              audit: bool = False, cert: bool = False) -> Dict[str, P]:
+              audit: bool = False, cert: bool = False,
+              warm: bool = False) -> Dict[str, P]:
     ys = {k: P() for k in _METRIC_KEYS}
     if cert:
         # certified swap pruning: the per-tick fallback indicator is the
         # negation of an all-analyst AND over post-collective verdicts —
         # replicated across the mesh by construction.
         ys["cert_fallback"] = P()
+    if warm:
+        # warm SP1: the dual-ascent iteration count is driven by the
+        # globally-reduced KKT error, so every shard exits its while_loop
+        # at the same count — replicated by construction.
+        ys["sp1_iters"] = P()
     if mode != "wrapfree":
         ys["expired"] = P()
     if mode == "paged":     # paging telemetry: post-psum scalars
@@ -88,15 +94,18 @@ def _ys_specs(mode: str, diagnostics: bool, trace_level: int = 0,
     return ys
 
 
-def _op_specs(mode: str):
+def _op_specs(mode: str, warm: bool = False):
     """shard_map in_specs for the mint-op tuple of ``mode``.  The [T, B]
     rows shard their slot axis; the paged extras — the [B] per-slot
     ``mint_tick`` vector and the [S, Hp/S] local hot-ring slot table —
     shard with the ledger, handing each shard its own stripe's retirement
-    schedule."""
+    schedule.  Warm SP1 appends the [T, B] mint mask to wrap-free chunks
+    (the dual-reset schedule), sharded like every other slot-axis row."""
     if mode == "paged":
         return (P(None, AXIS),) * 4 + (P(AXIS), P(AXIS, None))
-    return (P(None, AXIS),) * (4 if mode == "carry" else 3)
+    if mode == "wrapfree":
+        return (P(None, AXIS),) * (4 if warm else 3)
+    return (P(None, AXIS),) * 4
 
 
 @functools.lru_cache(maxsize=64)
@@ -117,12 +126,15 @@ def _sharded_chunk(scheduler: str, cfg: SchedulerConfig, n_ticks: int,
         audit=audit, block_axis=BlockAxis(AXIS))
     carry = (P(None, None, AXIS), P(), P(AXIS)) if mode != "wrapfree" \
         else (P(), P(AXIS))
+    warm = cfg.sp1_warm_start
+    if warm:
+        carry = carry + (P(AXIS),)      # the [B] dual stripe rides along
     cert = (cfg.swap_beam > 0 and cfg.refine and cfg.incremental_swap)
     sm = compat.shard_map(
         fn, mesh=mesh,
-        in_specs=(state_specs(), _op_specs(mode)),
+        in_specs=(state_specs(), _op_specs(mode, warm)),
         out_specs=(carry, _ys_specs(mode, diagnostics, trace_level, audit,
-                                    cert)),
+                                    cert, warm)),
         # check_rep/check_vma chokes on collectives under scan/while_loop
         # on older jax; replication of the P() outputs is guaranteed by
         # construction (they are all post-collective values).
@@ -226,7 +238,8 @@ class ShardedFlaasService(FlaasService):
                               self.cfg.trace_level,
                               self.cfg.audit_path is not None)
         shardings = tuple(NamedSharding(self.mesh, spec)
-                          for spec in _op_specs(mode))
+                          for spec in _op_specs(
+                              mode, self.cfg.sched.sp1_warm_start))
 
         def run(state, ops):
             # state is mesh-committed by the `state` setter; the mint-plan

@@ -99,7 +99,7 @@ def state_specs() -> ServiceState:
         demand=P(None, None, AXIS),
         arrival=P(), loss=P(), spawn_tick=P(), done=P(), weight=P(),
         block_budget=P(AXIS), block_capacity=P(AXIS), block_birth=P(AXIS),
-        tick=P())
+        lam=P(AXIS), tick=P())
 
 
 def state_shardings(mesh) -> ServiceState:

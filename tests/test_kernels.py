@@ -225,3 +225,101 @@ class TestBoostScanKernel:
         np.testing.assert_allclose(np.asarray(a.x_pipeline),
                                    np.asarray(b.x_pipeline),
                                    rtol=1e-5, atol=1e-6)
+
+
+class TestDualStepKernel:
+    """SP1's fused dual-ascent sweep (x(lambda), the block loads, and the
+    per-block residual in one [M, K]-tiled pass) must be BITWISE-identical
+    to the jnp reference at every tile shape — the residual drives the
+    while_loop exit test, so a last-ulp difference would change iteration
+    counts and break warm-off parity.
+
+    The reference is compared UNDER JIT: the kernel's row-reduce matches
+    the XLA-compiled reduction order, while eager op-by-op dispatch can
+    associate the same sum differently in the last ulp."""
+
+    REF = staticmethod(jax.jit(ref.dual_step_ref, static_argnums=(7,)))
+
+    def _instance(self, key, M, K, beta=2.2):
+        ks = jax.random.split(key, 5)
+        c = jax.random.uniform(ks[0], (M, K), jnp.float32) * \
+            (jax.random.uniform(ks[1], (M, K)) > 0.3)
+        lam = jnp.exp(jax.random.normal(ks[2], (K,)) * 3.0)
+        w_pow = jax.random.uniform(ks[3], (M,), jnp.float32) ** (1.0 - beta)
+        xcap = jax.random.uniform(ks[4], (M,), jnp.float32) * 10.0
+        mask = jax.random.uniform(ks[0], (M,)) > 0.2
+        cap = jax.random.uniform(ks[1], (K,), jnp.float32) + 0.1
+        cap_safe = jnp.maximum(cap, 1e-12)
+        return c, lam, w_pow, xcap, mask, cap, cap_safe
+
+    @pytest.mark.parametrize("M,K,bm", [
+        (5, 123, 4),        # non-divisor tile: padded tail rows
+        (7, 33, 3),
+        (8, 64, 8),         # exact tiling
+        (64, 256, 256),     # single tile covering all rows
+        (1, 1, 1),          # degenerate
+        (6, 2000, 256),
+    ])
+    def test_bitwise_vs_ref(self, M, K, bm):
+        args = self._instance(KEY, M, K)
+        x, g = ops.dual_step_op(*args, beta=2.2, block_m=bm)
+        x_ref, g_ref = self.REF(*args, 2.2)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(x_ref))
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+
+    def test_bitwise_across_tile_shapes(self):
+        # the same instance through every tile shape: one canonical answer
+        args = self._instance(jax.random.PRNGKey(11), 13, 77)
+        outs = [ops.dual_step_op(*args, beta=2.2, block_m=bm)
+                for bm in (1, 2, 4, 5, 13, 64)]
+        for x, g in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(x),
+                                          np.asarray(outs[0][0]))
+            np.testing.assert_array_equal(np.asarray(g),
+                                          np.asarray(outs[0][1]))
+
+    def test_vmapped(self):
+        # the waterfill runs under the engine's scan/vmap machinery; the
+        # kernel must batch through pallas_call bitwise
+        ks = jax.random.split(KEY, 4)
+        B, M, K = 3, 6, 40
+        c = jax.random.uniform(ks[0], (B, M, K), jnp.float32)
+        lam = jnp.exp(jax.random.normal(ks[1], (B, K)))
+        w_pow = jax.random.uniform(ks[2], (B, M), jnp.float32)
+        xcap = jax.random.uniform(ks[3], (B, M), jnp.float32) * 5.0
+        mask = jnp.ones((B, M), bool)
+        cap = jax.random.uniform(ks[0], (B, K), jnp.float32) + 0.1
+        cs = jnp.maximum(cap, 1e-12)
+        fn = lambda *a: ops.dual_step_op(*a, beta=2.2, block_m=4)
+        rfn = jax.jit(jax.vmap(lambda *a: ref.dual_step_ref(*a, 2.2)))
+        x, g = jax.vmap(fn)(c, lam, w_pow, xcap, mask, cap, cs)
+        x_ref, g_ref = rfn(c, lam, w_pow, xcap, mask, cap, cs)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(x_ref))
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+
+    def test_masked_rows_are_inert(self):
+        # a masked-out analyst contributes exactly zero to every load
+        args = list(self._instance(KEY, 9, 31))
+        args[4] = jnp.zeros((9,), bool)
+        x, g = ops.dual_step_op(*args, beta=2.2, block_m=4)
+        assert (np.asarray(x) == 0.0).all()
+        x_ref, g_ref = self.REF(*args, 2.2)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+
+    def test_hotpath_dispatch(self):
+        # hotpath.dual_step with use_pallas routes through the fused
+        # kernel unsharded, and matches the two-matvec fallback to rtol
+        from repro.core import hotpath
+        c, lam, w_pow, xcap, mask, cap, cap_safe = self._instance(KEY, 5, 123)
+        xp, gp = jax.jit(
+            lambda c_, l_, w_, *a: hotpath.dual_step(c_, l_, w_, 2.2, *a,
+                                                     use_pallas=True))(
+            c, lam, w_pow, xcap, mask, cap, cap_safe)
+        xj, gj = jax.jit(
+            lambda c_, l_, w_, *a: hotpath.dual_step(c_, l_, w_, 2.2, *a,
+                                                     use_pallas=False))(
+            c, lam, w_pow, xcap, mask, cap, cap_safe)
+        np.testing.assert_allclose(np.asarray(xp), np.asarray(xj),
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gj),
+                                   rtol=1e-4, atol=1e-6)

@@ -1,0 +1,319 @@
+"""Warm-started SP1 dual solver (PR 10).
+
+Three contracts:
+
+* **Warm-off is bitwise** — ``sp1_warm_start=False`` (the default) must
+  reproduce the historical solver op-for-op: a supplied ``rnd.lam`` is
+  ignored, the scan carry keeps its old structure, and every scheduler's
+  round outputs are array-equal with and without a lam in the inputs.
+* **Warm agrees with cold** — the SP1 fixed point is unique for beta > 0,
+  so a warm-started episode must land within ``10 * solver_tol`` of the
+  cold one wherever the solves converge.  (Scenarios whose instances hit
+  ``max_iters`` under BOTH solvers — e.g. bursty_arrivals' near-degenerate
+  round 0 — are excluded: neither answer is a fixed point there.)
+* **The dual state is durable** — the service carries the duals across
+  chunk/ring-wrap boundaries, shards them with the ledger, and restores
+  them through checkpoints (v4) and elastic shard remaps.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SCHEDULER_NAMES, SchedulerConfig,
+                        alpha_fair_waterfill, generate_episode, run_episode,
+                        scenario_config)
+from repro.core.demand import RoundInputs
+from repro.core.registry import get_round_fn
+
+N_DEV = len(jax.devices())
+CONVERGENT_SCENARIOS = ("paper_default", "tight_budgets", "analyst_churn")
+METRICS = ("round_efficiency", "round_fairness", "round_fairness_norm",
+           "round_jain", "n_allocated", "leftover")
+TOL = 1e-6          # default solver_tol
+
+
+def small_episode(scenario="paper_default", seed=0, n_rounds=8):
+    cfg = scenario_config(scenario, seed=seed)
+    cfg = dataclasses.replace(cfg, n_rounds=n_rounds)
+    return generate_episode(cfg)
+
+
+def episode_gap(ya, yb, keys=METRICS):
+    """Scale-normalized max gap (the replay_gap / shard-parity
+    convention: absolute below 1, relative above)."""
+    worst = 0.0
+    for k in keys:
+        a = np.asarray(ya[k], np.float64)
+        b = np.asarray(yb[k], np.float64)
+        worst = max(worst, float(np.max(np.abs(a - b)) /
+                                 max(1.0, np.max(np.abs(a)))))
+    return worst
+
+
+def round_inputs(key, M=3, N=4, K=10):
+    ks = jax.random.split(key, 4)
+    demand = (jax.random.uniform(ks[0], (M, N, K), jnp.float32) * 0.3 *
+              (jax.random.uniform(ks[1], (M, N, K)) > 0.4))
+    return RoundInputs(
+        demand=demand,
+        active=jnp.ones((M, N), bool),
+        arrival=jnp.zeros((M, N), jnp.float32),
+        loss=jax.random.uniform(ks[2], (M, N), jnp.float32, 0.5, 1.0),
+        capacity=jax.random.uniform(ks[3], (K,), jnp.float32, 0.5, 1.5),
+        budget_total=jnp.ones((K,), jnp.float32),
+        now=jnp.asarray(0.0, jnp.float32))
+
+
+class TestWarmOffBitwise:
+    """The off path is the historical solver, to the bit."""
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    def test_round_ignores_lam_when_off(self, scheduler):
+        rnd = round_inputs(jax.random.PRNGKey(3))
+        fn = jax.jit(get_round_fn(scheduler),
+                     static_argnames=("cfg",))
+        cfg = SchedulerConfig(beta=2.2)
+        a = fn(rnd, cfg=cfg)
+        b = fn(dataclasses.replace(
+            rnd, lam=jnp.full((10,), 7.5, jnp.float32)), cfg=cfg)
+        assert a.sp1_lam is None and b.sp1_lam is None
+        for fa, fb in zip(a, b):
+            if fa is not None:
+                np.testing.assert_array_equal(np.asarray(fa),
+                                              np.asarray(fb))
+
+    def test_waterfill_off_path_matches_legacy_trace(self):
+        # lam0=None + adaptive=False is op-for-op the pre-PR solver; pin
+        # the decaying-step trajectory with a committed regression value
+        rnd = round_inputs(jax.random.PRNGKey(9), M=4, N=3, K=16)
+        gamma = rnd.demand.sum(axis=1)
+        mu = jnp.max(gamma, axis=1)
+        res = alpha_fair_waterfill(mu, jnp.ones(4), gamma,
+                                   jnp.ones(4, bool))
+        res2 = alpha_fair_waterfill(mu, jnp.ones(4), gamma,
+                                    jnp.ones(4, bool),
+                                    lam0=None, adaptive=False)
+        np.testing.assert_array_equal(np.asarray(res.x), np.asarray(res2.x))
+        np.testing.assert_array_equal(np.asarray(res.lam),
+                                      np.asarray(res2.lam))
+        assert int(res.iters) == int(res2.iters)
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    def test_engine_warm_off_is_default(self, scheduler):
+        ep = small_episode(n_rounds=4)
+        a = run_episode(ep, SchedulerConfig(beta=2.2), scheduler)
+        b = run_episode(ep, SchedulerConfig(beta=2.2,
+                                            sp1_warm_start=False), scheduler)
+        assert episode_gap(a, b) == 0.0
+
+
+class TestWarmVsCold:
+    """Warm episodes land on the cold fixed point (convergent scenarios)."""
+
+    @pytest.mark.parametrize("scenario", CONVERGENT_SCENARIOS)
+    def test_dpbalance_within_10x_tol(self, scenario):
+        ep = small_episode(scenario)
+        cold = run_episode(ep, SchedulerConfig(beta=2.2), "dpbalance")
+        warm = run_episode(ep, SchedulerConfig(beta=2.2,
+                                               sp1_warm_start=True),
+                           "dpbalance")
+        assert episode_gap(cold, warm) <= 10 * TOL
+
+    @pytest.mark.parametrize("scheduler", ("dpf", "dpk", "fcfs"))
+    def test_baselines_bitwise(self, scheduler):
+        # baselines run no SP1: the lam carry passes through untouched and
+        # the round outputs are identical to the bit
+        ep = small_episode(n_rounds=4)
+        cold = run_episode(ep, SchedulerConfig(beta=2.2), scheduler)
+        warm = run_episode(ep, SchedulerConfig(beta=2.2,
+                                               sp1_warm_start=True),
+                           scheduler)
+        assert episode_gap(cold, warm) == 0.0
+
+    def test_warm_steady_state_converges_fast(self):
+        # the whole point: after warmup, a warm solve should close in far
+        # fewer iterations than max_iters (acceptance: < 20 steady-state)
+        ep = small_episode("paper_default")
+        out = run_episode(ep, SchedulerConfig(beta=2.2, sp1_warm_start=True),
+                          "dpbalance")
+        iters = np.asarray(out["sp1_iters"])
+        assert iters.min() < 20, iters
+
+
+class TestSolverProperties:
+    """Hypothesis: warm entry from any nearby dual state reaches the cold
+    fixed point; the adaptive loop never exits early with a violated KKT
+    system."""
+
+    @pytest.fixture(autouse=True)
+    def _hyp(self):
+        pytest.importorskip("hypothesis",
+                            reason="property tests require hypothesis")
+
+    def test_warm_from_perturbed_duals_matches_cold(self):
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 5),
+               st.integers(1, 6))
+        def prop(seed, M, K):
+            key = jax.random.PRNGKey(seed)
+            ks = jax.random.split(key, 3)
+            c = jax.random.uniform(ks[0], (M, K), jnp.float32, 0.05, 0.95)
+            mu = jnp.max(c, axis=1)
+            mask = jnp.ones((M,), bool)
+            cold = alpha_fair_waterfill(mu, jnp.ones(M), c, mask,
+                                        adaptive=True)
+            # previous-round duals = this round's fixed point, perturbed
+            lam0 = cold.lam * jnp.exp(
+                jax.random.uniform(ks[1], (K,), jnp.float32, -0.2, 0.2))
+            warm = alpha_fair_waterfill(mu, jnp.ones(M), c, mask,
+                                        lam0=lam0, adaptive=True)
+            if int(cold.iters) < 4000 and int(warm.iters) < 4000:
+                np.testing.assert_allclose(np.asarray(warm.x),
+                                           np.asarray(cold.x),
+                                           atol=10 * TOL, rtol=10 * TOL)
+
+        prop()
+
+    def test_adaptive_exits_converged_or_exhausted(self):
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4),
+               st.integers(1, 5))
+        def prop(seed, M, K):
+            key = jax.random.PRNGKey(seed)
+            c = jax.random.uniform(key, (M, K), jnp.float32, 0.05, 0.95)
+            mu = jnp.max(c, axis=1)
+            res = alpha_fair_waterfill(mu, jnp.ones(M), c,
+                                       jnp.ones((M,), bool), adaptive=True)
+            # while iterations remained, the loop must not have stopped
+            # with the KKT system still violated beyond tol
+            if int(res.iters) < 4000:
+                assert float(res.violation) <= 10 * TOL
+
+        prop()
+
+
+class TestWarmService:
+    """The service plane: duals survive chunks, ring wraps, shards, and
+    checkpoints."""
+
+    RING, TICKS = 80, 16
+    SIZE = dict(n_devices=4, pipelines_per_analyst=6)
+
+    def build(self, warm=True, n_shards=None, scheduler="dpbalance"):
+        from repro.service import FlaasService, ServiceConfig, make_trace
+        trace = make_trace("paper_default", "poisson", seed=2, **self.SIZE)
+        cfg = ServiceConfig(
+            scheduler=scheduler,
+            sched=SchedulerConfig(beta=2.2, sp1_warm_start=warm),
+            analyst_slots=3, pipeline_slots=6, block_slots=self.RING,
+            chunk_ticks=4, admit_batch=8, max_pending=64)
+        if n_shards is None:
+            return FlaasService(cfg, trace)
+        from repro.shard import ShardedFlaasService
+        return ShardedFlaasService(cfg, trace, n_shards=n_shards)
+
+    @pytest.mark.parametrize("scheduler", SCHEDULER_NAMES)
+    def test_warm_vs_cold_through_ring_wrap(self, scheduler):
+        # 16 ticks over an 80-slot ring at 8 blocks/tick wraps the ring:
+        # minted slots reset their dual entries and parity must survive
+        from repro.service import collect_service_metrics
+        ys_c = collect_service_metrics(self.build(False, scheduler=scheduler),
+                                       self.TICKS)
+        ys_w = collect_service_metrics(self.build(True, scheduler=scheduler),
+                                       self.TICKS)
+        assert episode_gap(ys_c, ys_w) <= 10 * TOL
+
+    def test_warm_duals_actually_carry(self):
+        svc = self.build(True)
+        svc.run(self.TICKS)
+        lam = np.asarray(svc.state.lam)
+        assert (lam != 1.0).any()          # not silently cold
+        s = svc.summary()["sp1_solver"]
+        assert s["rounds"] == self.TICKS
+        assert s["warm_resets"] > 0        # the ring wrapped
+        assert sum(s["iters_buckets"]) == s["rounds"]
+
+    def test_warm_off_summary_has_no_sp1_section(self):
+        svc = self.build(False)
+        svc.run(8)
+        assert "sp1_solver" not in svc.summary()
+
+    def test_one_shard_bitwise(self):
+        from repro.service import collect_service_metrics
+        ys_u = collect_service_metrics(self.build(True), self.TICKS)
+        ys_1 = collect_service_metrics(self.build(True, n_shards=1),
+                                       self.TICKS)
+        assert episode_gap(ys_u, ys_1) == 0.0
+
+    @pytest.mark.skipif(N_DEV < 4, reason="needs >= 4 devices")
+    def test_multi_shard_parity(self):
+        from repro.service import collect_service_metrics
+        ys_u = collect_service_metrics(self.build(True), self.TICKS)
+        ys_4 = collect_service_metrics(self.build(True, n_shards=4),
+                                       self.TICKS)
+        assert episode_gap(ys_u, ys_4) <= 1e-5
+
+    def test_checkpoint_carries_duals(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.service.telemetry import summary_fingerprint
+        ref = self.build(True)
+        ref.run(self.TICKS)
+        svc = self.build(True)
+        svc.run(8)
+        mgr = CheckpointManager(str(tmp_path))
+        svc.save_checkpoint(mgr)
+        fresh = self.build(True)
+        fresh.load_checkpoint(mgr)
+        np.testing.assert_array_equal(np.asarray(fresh.state.lam),
+                                      np.asarray(svc.state.lam))
+        fresh.run(self.TICKS - 8)
+        assert (summary_fingerprint(fresh.summary())
+                == summary_fingerprint(ref.summary()))
+
+    def test_pre_v4_checkpoint_restores_cold_duals(self, tmp_path):
+        # a v3 checkpoint has no lam leaf and no v4 stamp: the template
+        # fills in the fresh cold dual and the restore proceeds
+        import pickle
+
+        from repro.checkpoint.manager import CheckpointManager
+        svc = self.build(True)
+        svc.run(8)
+        mgr = CheckpointManager(str(tmp_path))
+        step = svc.save_checkpoint(mgr)
+        base = tmp_path / f"step_{step:010d}"
+        # rewrite the step as a pre-PR-10 service would have written it:
+        # version 3 host payload, no lam array in the device pytree
+        with open(base / "host.pkl", "rb") as f:
+            host = pickle.load(f)
+        host["version"] = 3
+        with open(base / "host.pkl", "wb") as f:
+            pickle.dump(host, f)
+        with np.load(base / "state.npz") as z:
+            flat = {k: z[k] for k in z.files if "lam" not in k}
+        np.savez(base / "state.npz", **flat)
+        fresh = self.build(True)
+        assert fresh.load_checkpoint(mgr) == step
+        np.testing.assert_array_equal(np.asarray(fresh.state.lam),
+                                      np.ones(self.RING, np.float32))
+
+    def test_elastic_remap_permutes_duals(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.shard.state import remap_ring
+        svc = self.build(True)
+        svc.run(8)
+        mgr = CheckpointManager(str(tmp_path))
+        svc.save_checkpoint(mgr)
+        fresh = self.build(True, n_shards=1)
+        fresh.load_checkpoint(mgr)
+        idx = remap_ring(1, 1, self.RING)
+        np.testing.assert_array_equal(
+            np.asarray(fresh.state.lam), np.asarray(svc.state.lam)[idx])
